@@ -1,0 +1,88 @@
+"""Cluster-autotuner benchmark (beyond-paper feature) + kernel microbench."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.cluster.autotune import autotune
+from repro.core.moo.pareto import hypervolume_2d
+
+
+def run_cluster_autotune(archs=("qwen2-72b", "dbrx-132b", "rwkv6-1.6b"),
+                         shape: str = "train_4k") -> List[dict]:
+    rows = []
+    for arch in archs:
+        for w in [(0.9, 0.1), (0.5, 0.5), (0.1, 0.9)]:
+            plan = autotune(arch, shape, weights=w)
+            F = plan.front
+            lo, hi = F.min(0), F.max(0)
+            span = np.where(hi > lo, hi - lo, 1.0)
+            hv = hypervolume_2d((F - lo) / span, np.array([1.1, 1.1]))
+            rows.append({
+                "arch": arch, "shape": shape,
+                "weights": f"{w[0]}/{w[1]}",
+                "chips": int(plan.theta_c["n_chips"]),
+                "tp": int(plan.theta_c["model_par"]),
+                "carry_shard": bool(plan.theta_c["act_shard_model"]),
+                "pred_ms_per_step": round(plan.predicted[0] * 1e3, 1),
+                "pred_usd_per_step": round(plan.predicted[1], 5),
+                "front_size": F.shape[0],
+                "front_hv": round(hv, 4),
+                "solve_time_s": round(plan.solve_time, 3),
+            })
+    return rows
+
+
+def run_kernels() -> List[dict]:
+    """Kernel microbenches (interpret mode on CPU — correctness + call
+    overhead; on-TPU timing is the deployment path)."""
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ops import attention_ref, \
+        flash_attention
+    from repro.kernels.pareto_filter.ops import pareto_filter, \
+        pareto_mask_ref
+    from repro.kernels.ws_reduce.ops import ws_reduce, ws_reduce_ref
+    rng = np.random.default_rng(0)
+    rows = []
+
+    F = jnp.asarray(rng.random((512, 2)).astype(np.float32))
+    valid = jnp.ones(512, bool)
+    for name, fn in [("pareto_filter[512x2]",
+                      lambda: pareto_filter(F, valid)),
+                     ("pareto_ref[512x2]",
+                      lambda: pareto_mask_ref(F, valid))]:
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn()
+        rows.append({"kernel": name,
+                     "us_per_call": (time.perf_counter() - t0) / 3 * 1e6})
+
+    Fb = jnp.asarray(rng.random((8, 128, 2)).astype(np.float32))
+    W = jnp.asarray(rng.random((11, 2)).astype(np.float32))
+    for name, fn in [("ws_reduce[8x128x2,w11]",
+                      lambda: ws_reduce(Fb, W)),
+                     ("ws_reduce_ref", lambda: ws_reduce_ref(Fb, W))]:
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn()
+        rows.append({"kernel": name,
+                     "us_per_call": (time.perf_counter() - t0) / 3 * 1e6})
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    for name, fn in [("flash_attn[256,GQA2]",
+                      lambda: flash_attention(q, k, v, causal=True)),
+                     ("attn_ref", lambda: attention_ref(q, k, v,
+                                                        causal=True))]:
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn()
+        rows.append({"kernel": name,
+                     "us_per_call": (time.perf_counter() - t0) / 3 * 1e6})
+    return rows

@@ -1,0 +1,143 @@
+"""End-to-end evaluation (paper Tables 4–5, §6.3).
+
+Executes the *chosen* configurations in the ground-truth simulator with AQE
+on, comparing:
+
+  default  — Spark defaults.
+  mo_ws    — MO-WS: query-level weighted-sum over the model objectives (the
+             paper's strongest prior baseline), WUN pick.
+  so_fw    — fixed-weight single-objective scalarization (Table 5 rival).
+  hmooc3   — compile-time fine-grained HMOOC3 + submission aggregation.
+  hmooc3+  — + runtime optimization during AQE.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.moo.baselines import solve_so_fw, solve_ws
+from repro.core.moo.hmooc import HMOOCConfig
+from repro.core.moo.wun import wun_select
+from repro.core.tuning.compile_time import compile_time_optimize
+from repro.core.tuning.objectives import StageObjectives
+from repro.core.tuning.runtime import make_runtime_optimizers
+from repro.queryengine.aqe import run_with_aqe
+from repro.queryengine.simulator import default_theta
+from repro.queryengine.workloads import make_benchmark
+
+from .common import eval_queries, get_model
+
+
+def _coarse_pick(obj: StageObjectives, weights, method: str, seed: int
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, float]:
+    """Query-level baseline pick → (θc, θp, θs) raw + solve time."""
+    ev, D = obj.query_eval_coarse()
+    if method == "mo_ws":
+        F, U, dt, _ = solve_ws(ev, D, n_samples=10000, n_weights=11,
+                               seed=seed)
+        i, _ = wun_select(F, np.asarray(weights))
+        u = U[i]
+    else:  # so_fw
+        F, U, dt, _ = solve_so_fw(ev, D, np.asarray(weights),
+                                  n_samples=10000, seed=seed)
+        u = U[0]
+    tc, tp, ts = obj.split_raw(u[None, :obj.d_c],
+                               u[None, obj.d_c:])
+    return tc[0], tp[0], ts[0], dt
+
+
+def run_end_to_end(bench: str = "tpch", weights=(0.9, 0.1),
+                   methods=("default", "mo_ws", "hmooc3", "hmooc3+"),
+                   n_queries: Optional[int] = None, use_model: bool = True,
+                   seed: int = 0) -> List[dict]:
+    model = get_model(bench, "subq")[0] if use_model else None
+    queries = eval_queries(bench)
+    if n_queries:
+        queries = queries[:n_queries]
+
+    lat: Dict[str, list] = {m: [] for m in methods}
+    cost: Dict[str, list] = {m: [] for m in methods}
+    stime: Dict[str, list] = {m: [] for m in methods}
+
+    for q in queries:
+        tc0, tp0, ts0 = default_theta(1)
+        for m in methods:
+            t0 = time.perf_counter()
+            if m == "default":
+                r = run_with_aqe(q, tc0[0], tp0[0], ts0[0])
+                st = 0.0
+            elif m in ("mo_ws", "so_fw"):
+                obj = StageObjectives(q, model=model)
+                tc, tp, ts, st = _coarse_pick(obj, weights, m, seed)
+                r = run_with_aqe(q, tc, tp, ts)
+            else:
+                ct = compile_time_optimize(
+                    q, model=model, weights=weights,
+                    cfg=HMOOCConfig(dag_method="hmooc3", seed=seed))
+                st = ct.solve_time
+                if m == "hmooc3":
+                    r = run_with_aqe(q, ct.theta_c, ct.theta_p0, ct.theta_s0)
+                else:
+                    t1 = time.perf_counter()
+                    lqp_o, qs_o = make_runtime_optimizers(
+                        q, ct.theta_c, seed_theta_p=ct.theta_p_sub,
+                        seed_theta_s=ct.theta_s_sub,
+                        model_subq=model, model_qs=model, weights=weights,
+                        seed=seed)
+                    r = run_with_aqe(q, ct.theta_c, ct.theta_p0,
+                                     ct.theta_s0, lqp_optimizer=lqp_o,
+                                     qs_optimizer=qs_o)
+                    st += (time.perf_counter() - t1) * 0.5  # runtime share
+            lat[m].append(float(r.sim.actual_latency[0]))
+            cost[m].append(float(r.sim.cost[0]))
+            stime[m].append(st)
+
+    rows = []
+    base_l = np.array(lat["default"])
+    base_c = np.array(cost["default"])
+    for m in methods:
+        L = np.array(lat[m])
+        C = np.array(cost[m])
+        S = np.array(stime[m])
+        rows.append({
+            "bench": bench, "method": m,
+            "weights": f"{weights[0]}/{weights[1]}",
+            "total_lat_reduction": float(1 - L.sum() / base_l.sum()),
+            "avg_lat_reduction": float(np.mean(1 - L / base_l)),
+            "avg_cost_reduction": float(np.mean(1 - C / base_c)),
+            "coverage_1s": float(np.mean(S <= 1.0)),
+            "coverage_2s": float(np.mean(S <= 2.0)),
+            "avg_solve_s": float(S.mean()),
+            "max_solve_s": float(S.max()),
+        })
+    return rows
+
+
+def run_adaptability(bench: str = "tpch", use_model: bool = True,
+                     n_queries: Optional[int] = 22, seed: int = 0
+                     ) -> List[dict]:
+    """Paper Table 5: preference sweep, SO-FW vs HMOOC3+."""
+    rows = []
+    for w in [(0.0, 1.0), (0.1, 0.9), (0.5, 0.5), (0.9, 0.1), (1.0, 0.0)]:
+        r = run_end_to_end(bench, weights=w,
+                           methods=("default", "so_fw", "hmooc3+"),
+                           n_queries=n_queries, use_model=use_model,
+                           seed=seed)
+        for row in r:
+            if row["method"] != "default":
+                rows.append(row)
+    return rows
+
+
+def run_pruning(bench: str = "tpch") -> List[dict]:
+    """§5.2: runtime-request pruning rates."""
+    tc, tp, ts = default_theta(1)
+    sent = tot = 0
+    for q in make_benchmark(bench):
+        r = run_with_aqe(q, tc[0], tp[0], ts[0], prune=True)
+        sent += r.requests_sent
+        tot += r.requests_total
+    return [{"bench": bench, "requests_sent": sent, "requests_total": tot,
+             "prune_rate": 1 - sent / tot}]

@@ -1,0 +1,25 @@
+"""Model-accuracy benchmark (paper Table 3)."""
+from __future__ import annotations
+
+from typing import List
+
+from .common import get_model
+
+
+def run_model_accuracy(benches=("tpch", "tpcds")) -> List[dict]:
+    rows = []
+    for bench in benches:
+        for kind in ("subq", "qs", "lqp"):
+            model, ds, met = get_model(bench, kind)
+            rows.append({
+                "bench": bench, "target": kind,
+                "lat_wmape": round(float(met.wmape[0]), 3),
+                "lat_p50": round(float(met.p50[0]), 3),
+                "lat_p90": round(float(met.p90[0]), 3),
+                "lat_corr": round(float(met.corr[0]), 3),
+                "io_wmape": round(float(met.wmape[1]), 3),
+                "io_p50": round(float(met.p50[1]), 3),
+                "io_corr": round(float(met.corr[1]), 3),
+                "xput_k_per_s": round(met.xput / 1e3, 0),
+            })
+    return rows

@@ -1,0 +1,47 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads ``results/dryrun/*.json`` and reports, per (arch × shape × mesh):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and the roofline fraction (compute term / bound term — 1.0 means the cell
+runs at the compute roofline).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from .common import RESULTS
+
+
+def run_roofline(pattern: str = "*") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(
+            os.path.join(RESULTS, "dryrun", f"{pattern}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": "-", "status": "skipped",
+                         "reason": r["reason"][:60]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": "-", "status": "error"})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_ms": round(rf["compute_s"] * 1e3, 2),
+            "memory_ms": round(rf["memory_s"] * 1e3, 2),
+            "collective_ms": round(rf["collective_s"] * 1e3, 2),
+            "dominant": rf["dominant"],
+            "roofline_fraction": round(rf["compute_s"]
+                                       / max(rf["bound_s"], 1e-12), 4),
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "peak_gb_per_dev": r["memory"]["peak_per_device_gb"],
+            "compile_s": r["t_compile_s"],
+        })
+    return rows

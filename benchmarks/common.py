@@ -1,0 +1,77 @@
+"""Shared benchmark context: workloads, trained-model artifacts, caching.
+
+Model artifacts are trained once and cached under ``results/models/`` so
+repeated benchmark runs (and the end-to-end evaluation) reuse them.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.models.perf_model import ModelConfig, PerfModel
+from repro.core.models.training import (build_dataset, evaluate,
+                                        train_model)
+from repro.queryengine.trace import TraceSet, collect_traces
+from repro.queryengine.workloads import default_workload, make_benchmark
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+# Fast-mode budgets (full mode quadruples steps & configs).
+FAST = {"tpch": dict(variants=3, confs=32, steps=1500, lqp_steps=500),
+        "tpcds": dict(variants=1, confs=24, steps=1500, lqp_steps=1200)}
+
+
+def results_dir(*parts: str) -> str:
+    d = os.path.join(RESULTS, *parts)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+_TRACE_CACHE: Dict[str, TraceSet] = {}
+
+
+def get_traces(bench: str, fast: bool = True) -> TraceSet:
+    if bench not in _TRACE_CACHE:
+        cfg = FAST[bench]
+        qs = default_workload(bench, cfg["variants"], seed=0)
+        _TRACE_CACHE[bench] = collect_traces(qs, cfg["confs"], seed=0)
+    return _TRACE_CACHE[bench]
+
+
+_MODEL_CACHE: Dict[Tuple[str, str], Tuple[PerfModel, object, object]] = {}
+
+
+def get_model(bench: str, kind: str, fast: bool = True,
+              verbose: bool = True):
+    """(model, dataset, metrics) for one benchmark × target kind."""
+    key = (bench, kind)
+    if key in _MODEL_CACHE:
+        return _MODEL_CACHE[key]
+    traces = get_traces(bench, fast)
+    ds, cfg = build_dataset(traces, kind, seed=0)
+    path = os.path.join(results_dir("models"), f"{bench}_{kind}.npz")
+    budget = FAST[bench]
+    steps = budget["lqp_steps"] if kind == "lqp" else budget["steps"]
+    if os.path.exists(path):
+        model = PerfModel.load(cfg, path)
+        if verbose:
+            print(f"  [models] loaded {bench}/{kind} from cache")
+    else:
+        t0 = time.time()
+        bs = 64 if kind == "lqp" else 512
+        model = train_model(ds, cfg, steps=steps, batch=bs, seed=0)
+        model.save(path)
+        if verbose:
+            print(f"  [models] trained {bench}/{kind} "
+                  f"({steps} steps, {time.time()-t0:.0f}s)")
+    met = evaluate(model, ds)
+    _MODEL_CACHE[key] = (model, ds, met)
+    return _MODEL_CACHE[key]
+
+
+def eval_queries(bench: str):
+    return make_benchmark(bench)

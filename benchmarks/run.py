@@ -1,0 +1,118 @@
+"""Benchmark orchestrator: one entry per paper table/figure (+ ours).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME...]]
+        [--bench tpch|tpcds|both] [--oracle] [--full]
+
+Prints one CSV block per benchmark and writes JSON to results/bench/.
+
+Benchmarks → paper artifacts:
+  model_accuracy    Table 3      GTN+regressor WMAPE/P50/P90/Corr/Xput
+  dag_aggregation   Fig 10(a,b)  HMOOC1/2/3 HV + solving time
+  moo_comparison    Fig 10(c–e)  HMOOC3 vs WS/Evo/PF (fine-grained)
+  granularity       Fig 10(f)    query-level baselines vs HMOOC3
+  ws_coverage       Fig 4        WS front-collapse pathology
+  end_to_end        Table 4      latency reduction @ (0.9, 0.1)
+  adaptability      Table 5      preference sweep vs SO-FW
+  pruning           §5.2         runtime-request pruning rates
+  roofline          (ours)       per-cell dry-run roofline table
+  cluster_autotune  (ours)       HMOOC on the JAX cluster itself
+  kernels           (ours)       Pallas kernel microbenches
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+from .common import results_dir
+
+
+def _print_rows(name: str, rows: List[dict]) -> None:
+    print(f"\n=== {name} ===")
+    if not rows:
+        print("(no rows)")
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--bench", default="tpch",
+                    choices=["tpch", "tpcds", "both"])
+    ap.add_argument("--oracle", action="store_true",
+                    help="use simulator-on-estimates objectives (no models)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    benches = ["tpch", "tpcds"] if args.bench == "both" else [args.bench]
+    use_model = not args.oracle
+    nq = None if args.full else 10
+
+    from . import bench_cluster, bench_end_to_end, bench_models, bench_moo, \
+        bench_roofline
+
+    registry: Dict[str, Callable[[], List[dict]]] = {
+        "model_accuracy": lambda: bench_models.run_model_accuracy(
+            ("tpch", "tpcds")),   # Table 3 covers both benchmarks
+        "dag_aggregation": lambda: [r for b in benches for r in
+                                    bench_moo.run_dag_aggregation(
+                                        b, n_queries=nq or 22,
+                                        use_model=use_model)],
+        "moo_comparison": lambda: [r for b in benches for r in
+                                   bench_moo.run_moo_comparison(
+                                       b, n_queries=nq or 22, fine=True,
+                                       use_model=use_model)],
+        "granularity": lambda: [r for b in benches for r in
+                                bench_moo.run_moo_comparison(
+                                    b, n_queries=nq or 22, fine=False,
+                                    use_model=use_model)],
+        "ws_coverage": lambda: [r for b in benches for r in
+                                bench_moo.run_ws_coverage(
+                                    b, use_model=use_model)],
+        "end_to_end": lambda: [r for b in benches for r in
+                               bench_end_to_end.run_end_to_end(
+                                   b, n_queries=None if args.full else 22,
+                                   use_model=use_model)],
+        "adaptability": lambda: [r for b in benches for r in
+                                 bench_end_to_end.run_adaptability(
+                                     b, n_queries=None if args.full else 22,
+                                     use_model=use_model)],
+        "pruning": lambda: [r for b in ("tpch", "tpcds") for r in
+                            bench_end_to_end.run_pruning(b)],
+        "roofline": bench_roofline.run_roofline,
+        "cluster_autotune": bench_cluster.run_cluster_autotune,
+        "kernels": bench_cluster.run_kernels,
+    }
+
+    only = args.only.split(",") if args.only else list(registry)
+    out_dir = results_dir("bench")
+    summary = {}
+    for name in only:
+        if name not in registry:
+            print(f"unknown benchmark: {name}", file=sys.stderr)
+            continue
+        t0 = time.time()
+        try:
+            rows = registry[name]()
+        except Exception as exc:  # noqa: BLE001 — report and continue
+            print(f"\n=== {name} === FAILED: {type(exc).__name__}: {exc}")
+            summary[name] = "failed"
+            continue
+        _print_rows(name, rows)
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        summary[name] = f"{len(rows)} rows, {time.time()-t0:.0f}s"
+    print("\n=== summary ===")
+    for k, v in summary.items():
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Beyond-paper: HMOOC tunes the training cluster itself.
+
+    PYTHONPATH=src python examples/cluster_autotune.py [--arch qwen2-72b]
+
+θc = (chips, TP split, moment dtype, carry sharding), θp per layer block
+(remat / attention impl / MoE capacity), θs = (accum, unroll).  The Pareto
+front trades step latency against $ per step; WUN picks per preference.
+"""
+import argparse
+
+import numpy as np
+
+from repro.cluster.autotune import autotune
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-72b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    print(f"autotuning {args.arch} × {args.shape}\n")
+    for w in [(0.95, 0.05), (0.7, 0.3), (0.5, 0.5), (0.3, 0.7),
+              (0.05, 0.95)]:
+        plan = autotune(args.arch, args.shape, weights=w)
+        print(f"w(lat,cost)=({w[0]:.2f},{w[1]:.2f}) → {plan.summary()}")
+        for block, tp in plan.theta_p.items():
+            ts = plan.theta_s[block]
+            print(f"    {block:10s} remat={int(tp['remat'])} "
+                  f"chunked_attn={int(tp['chunked_attn'])} "
+                  f"cap={tp['capacity_factor']:.2f} "
+                  f"accum={int(ts['accum'])} unroll={int(ts['unroll'])}")
+
+    plan = autotune(args.arch, args.shape, weights=(0.5, 0.5))
+    F = plan.front[np.argsort(plan.front[:, 0])]
+    print("\nPareto front (latency s, $/step):")
+    for row in F:
+        print(f"  {row[0]:8.2f}  {row[1]:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Activation sharding constraints (GSPMD hints inside model code).
+
+Model code is mesh-agnostic; the launcher registers the active mesh here and
+``constrain`` applies ``with_sharding_constraint`` with divisibility-checked
+axis fallbacks.  The key consumer is the layer-scan carry: constraining it
+to P(('pod','data'), None, 'model') shards the per-layer saved activations
+(the dominant train-time residency) across the model axis as well as the
+batch axes — without it an 80-layer 8k-wide model stacks ~86 GB of carries
+per device.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["set_activation_mesh", "get_activation_mesh", "constrain",
+           "BATCH_AXES"]
+
+BATCH_AXES: Tuple[str, ...] = ("pod", "data")
+
+_CTX = threading.local()
+
+
+def set_activation_mesh(mesh, pure_dp: bool = False) -> None:
+    _CTX.mesh = mesh
+    _CTX.pure_dp = pure_dp
+
+
+def get_activation_mesh():
+    return getattr(_CTX, "mesh", None)
+
+
+def get_pure_dp() -> bool:
+    return getattr(_CTX, "pure_dp", False)
+
+
+def constrain(x, *spec: Union[None, str, Tuple[str, ...]]):
+    """Best-effort sharding constraint; no-op without a registered mesh.
+
+    Each entry is an axis name, a tuple of names, or None; names missing
+    from the mesh or not dividing the dim are dropped.
+    """
+    mesh = get_activation_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in sizes)
+        n = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        fixed.append(axes if axes and dim % n == 0 else None)
+    if len(fixed) < x.ndim:
+        fixed += [None] * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

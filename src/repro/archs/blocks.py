@@ -1,0 +1,614 @@
+"""Transformer / MoE / Mamba / RWKV blocks (init + apply, cache-aware).
+
+Conventions:
+  * ``init_*`` returns a param dict for ONE layer; stacks are built by the
+    model assembler with ``jax.vmap`` over a key axis (scan-ready leading L).
+  * ``apply_*`` signatures take (cfg, params, x, ...) and optionally a
+    per-layer cache dict; they return (y, new_cache).
+  * Caches use fixed-capacity buffers + a scalar ``len`` so decode steps are
+    shape-static under jit.
+  * Attention uses an einsum path by default (GSPMD-friendly; what the
+    dry-run rooflines) and the Pallas flash kernel when ``cfg.use_flash``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, DTYPES, init_dense, rmsnorm, rope
+
+Params = Dict[str, Any]
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + RoPE + optional sliding window)
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ArchConfig) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], (d, hq * dh), dt),
+        "wk": init_dense(ks[1], (d, hkv * dh), dt),
+        "wv": init_dense(ks[2], (d, hkv * dh), dt),
+        "wo": init_dense(ks[3], (hq * dh, d), dt,
+                         scale=1.0 / np.sqrt(hq * dh * 2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dt)
+        p["bk"] = jnp.zeros((hkv * dh,), dt)
+        p["bv"] = jnp.zeros((hkv * dh,), dt)
+    return p
+
+
+# Above this many logit elements the einsum path switches to the KV/Q
+# chunked online-softmax path (flash-style in jnp — the HLO the dry-run
+# rooflines; the Pallas kernel is the TPU execution path).
+_CHUNK_THRESHOLD = 1 << 26
+
+
+def _shard_attn_acts(x: jnp.ndarray) -> jnp.ndarray:
+    """Shard (B, H, S, D) attention activations: heads→model when the head
+    count divides the axis, else sequence→model (sequence parallelism);
+    pure-DP jobs shard batch over the whole mesh instead."""
+    from .act_sharding import (BATCH_AXES, constrain, get_activation_mesh,
+                               get_pure_dp)
+    mesh = get_activation_mesh()
+    if mesh is None:
+        return x
+    if get_pure_dp():
+        return constrain(x, BATCH_AXES + ("model",), None, None, None)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    if x.shape[1] % m == 0:
+        return constrain(x, BATCH_AXES, "model", None, None)
+    if x.shape[2] % m == 0:
+        return constrain(x, BATCH_AXES, None, "model", None)
+    return constrain(x, BATCH_AXES, None, None, None)
+
+
+def _attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool, window: int, kv_len: Optional[jnp.ndarray],
+            q_start=None, use_flash: bool) -> jnp.ndarray:
+    """q: (B, Hq, Sq, Dh); k/v: (B, Hkv, Skv, Dh) → (B, Hq, Sq, Dh).
+
+    ``q_start`` is the absolute key-index of query row 0 (defaults to the
+    aligned-ends convention Skv − Sq); ``kv_len`` masks cache slots ≥ len.
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    if use_flash and kv_len is None and window == 0:
+        from ..kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal)
+    q = _shard_attn_acts(q)
+    if Sq * Skv > _CHUNK_THRESHOLD and Sq > 1:
+        return _attend_chunked(q, k, v, causal=causal, window=window,
+                               kv_len=kv_len, q_start=q_start)
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / np.sqrt(Dh)
+    # Additive (S, S) f32 mask: a broadcasted add keeps backward trivial —
+    # a `where` with a (B, H, Sq, Skv) predicate would materialize a pred
+    # buffer of the full logits shape in the residuals (terabytes at 4k²).
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Skv)[None, :]
+    if q_start is None:
+        q_start = Skv - Sq
+    add = jnp.zeros((Sq, Skv), jnp.float32)
+    if causal:
+        add = add + jnp.where(kj <= qi + q_start, 0.0, NEG)
+    if window > 0:
+        add = add + jnp.where(kj > qi + q_start - window, 0.0, NEG)
+    if kv_len is not None:                      # decode: valid cache prefix
+        add = add + jnp.where(kj < kv_len, 0.0, NEG)
+    logits = logits + add[None, None]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _attend_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool, window: int, kv_len, q_start,
+                    bq: int = 1024, bk: int = 4096) -> jnp.ndarray:
+    """Online-softmax attention, chunked over Q and KV (flash in jnp).
+
+    Logit residency drops from O(Sq·Skv) to O(bq·bk) per step — the memory
+    shape the Pallas kernel has on real TPUs; XLA sees the same tiling via
+    the double scan, so the dry-run rooflines the right working set.  Both
+    bodies are checkpointed so training backward recomputes chunk logits.
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    if q_start is None:
+        q_start = Skv - Sq
+    sq_pad = (-Sq) % bq
+    sk_pad = (-Skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    kp = jnp.pad(kr, ((0, 0), (0, 0), (0, sk_pad), (0, 0)))
+    vp = jnp.pad(vr, ((0, 0), (0, 0), (0, sk_pad), (0, 0)))
+    nq, nk = qp.shape[2] // bq, kp.shape[2] // bk
+    scale = 1.0 / np.sqrt(Dh)
+    limit = kv_len if kv_len is not None else Skv
+
+    kc = kp.reshape(B, Hq, nk, bk, Dh).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(B, Hq, nk, bk, Dh).transpose(2, 0, 1, 3, 4)
+
+    def q_body(qi0, qcb):
+        qf = qcb.astype(jnp.float32)
+
+        def kv_body(carry, inp):
+            m_prev, l_prev, acc = carry
+            kj0, kcb, vcb = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                           kcb.astype(jnp.float32)) * scale  # (B,H,bq,bk)
+            qi = qi0 + jnp.arange(bq)[:, None]
+            kj = kj0 + jnp.arange(bk)[None, :]
+            add = jnp.where(kj < limit, 0.0, NEG)
+            if causal:
+                add = add + jnp.where(kj <= qi + q_start, 0.0, NEG)
+            if window > 0:
+                add = add + jnp.where(kj > qi + q_start - window, 0.0, NEG)
+            s = s + add[None, None]
+            m_cur = jnp.maximum(m_prev, s.max(-1))
+            p = jnp.exp(s - m_cur[..., None])
+            alpha = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vcb.astype(jnp.float32))
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((B, Hq, bq), NEG)
+        l0 = jnp.zeros((B, Hq, bq))
+        a0 = jnp.zeros((B, Hq, bq, Dh))
+        kj0s = jnp.arange(nk) * bk
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_body),
+                                      (m0, l0, a0), (kj0s, kc, vc))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    # Chunk the query axis with a checkpointed scan.
+    qcs = qp.reshape(B, Hq, nq, bq, Dh).transpose(2, 0, 1, 3, 4)
+    qi0s = jnp.arange(nq) * bq
+
+    def q_scan_body(_, inp):
+        qi0, qcb = inp
+        return None, q_body(qi0, qcb)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_scan_body), None, (qi0s, qcs))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, nq * bq, Dh)
+    return out[:, :, :Sq]
+
+
+def apply_attention(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+                    positions: jnp.ndarray,
+                    cache: Optional[Params] = None,
+                    xattn_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    causal: bool = True
+                    ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Self- (or cross-) attention with optional KV cache.
+
+    cache: {"k": (B, Hkv, C, Dh), "v": ..., "len": ()} — decode appends at
+    ``len`` and attends the valid prefix.  xattn_kv supplies precomputed
+    encoder K/V for cross-attention (whisper decoder).
+    """
+    B, S, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, hq, dh)
+    q = rope(q, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+
+    if xattn_kv is not None:
+        k, v = xattn_kv
+        y = _attend(q, k, v, causal=False, window=0, kv_len=None,
+                    use_flash=cfg.use_flash)
+        out = y.transpose(0, 2, 1, 3).reshape(B, S, hq * dh) @ p["wo"]
+        return out, cache
+
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    k = k.reshape(B, S, hkv, dh)
+    v = v.reshape(B, S, hkv, dh)
+    k = rope(k, positions, cfg.rope_theta)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if cache is None:
+        y = _attend(q, k, v, causal=causal, window=cfg.window, kv_len=None,
+                    use_flash=cfg.use_flash)
+        new_cache = {"k": k, "v": v,
+                     "len": jnp.asarray(S, jnp.int32)}
+        y = y.transpose(0, 2, 1, 3).reshape(B, S, hq * dh)
+        return y @ p["wo"], new_cache
+
+    # Cache path: append S new entries at cache["len"] (prefill-into-buffer
+    # when S > 1, single-token decode when S == 1).
+    C = cache["k"].shape[2]
+    idx = cache["len"]
+    if S >= C:
+        # Windowed prefill longer than the (rolling) cache: attend over the
+        # in-flight K/V and retain only the last C entries.
+        y = _attend(q, k, v, causal=causal, window=cfg.window, kv_len=None,
+                    use_flash=cfg.use_flash)
+        y = y.transpose(0, 2, 1, 3).reshape(B, S, hq * dh)
+        new_cache = {"k": k[:, :, S - C:], "v": v[:, :, S - C:],
+                     "len": jnp.asarray(C, jnp.int32)}
+        return y @ p["wo"], new_cache
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k, (0, 0, idx, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v, (0, 0, idx, 0))
+    kv_len = idx + S
+    y = _attend(q, ck, cv, causal=causal, q_start=idx,
+                window=cfg.window, kv_len=kv_len, use_flash=False)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, hq * dh)
+    return y @ p["wo"], {"k": ck, "v": cv, "len": kv_len}
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], (d, f), dt),
+        "w_up": init_dense(ks[1], (d, f), dt),
+        "w_down": init_dense(ks[2], (f, d), dt,
+                             scale=1.0 / np.sqrt(f * 2 * cfg.n_layers)),
+    }
+
+
+def apply_mlp(cfg: ArchConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE MLP (top-k dispatch with capacity, GSPMD expert parallelism)
+# ---------------------------------------------------------------------------
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_dense(ks[0], (d, e), jnp.float32),
+        "e_gate": init_dense(ks[1], (e, d, f), dt),
+        "e_up": init_dense(ks[2], (e, d, f), dt),
+        "e_down": init_dense(ks[3], (e, f, d), dt,
+                             scale=1.0 / np.sqrt(f * 2 * cfg.n_layers)),
+    }
+
+
+def _expert_ffn(p: Params, xe: jnp.ndarray) -> jnp.ndarray:
+    """(E, C, D) per-expert SwiGLU FFN → (E, C, D)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["e_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["e_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["e_down"])
+
+
+def apply_moe(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+              impl: str = "sort") -> jnp.ndarray:
+    """Top-k capacity MoE.
+
+    ``sort`` (default): argsort-dispatch — token slots are sorted by expert
+    id, ranked within expert (capacity C = T·k/E·cf), scattered into an
+    (E, C, D) buffer, run through per-expert SwiGLU einsums (MXU-shaped;
+    all-to-all under expert sharding), and combined back with gate weights.
+    Memory is O(T·k·D + E·C·D) — independent of the E×C cross product that
+    makes one-hot dispatch einsums infeasible for E=64 at 1M tokens.
+
+    ``einsum``: the classic (G, S, E, C) one-hot dispatch (kept for small
+    configs and cross-validation tests).
+    """
+    G, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gates = jax.nn.softmax(
+        (x.astype(jnp.float32) @ p["router"]), axis=-1)        # (G, S, E)
+    gval, gidx = jax.lax.top_k(gates, k)                       # (G, S, k)
+    gval = gval / jnp.maximum(gval.sum(-1, keepdims=True), 1e-9)
+
+    if impl == "einsum":
+        C = min(int(np.ceil(S * k / e * cfg.capacity_factor)), S)
+        onehot = jax.nn.one_hot(gidx, e, dtype=jnp.float32)    # (G, S, k, E)
+        flat = onehot.reshape(G, S * k, e)
+        pos = (jnp.cumsum(flat, axis=1) - 1.0).reshape(G, S, k, e)
+        within = (pos < C) & (onehot > 0)
+        slot = jnp.where(within, pos, 0).astype(jnp.int32)
+        slot_oh = jax.nn.one_hot(slot, C, dtype=x.dtype) \
+            * within.astype(x.dtype)[..., None]                # (G,S,k,E,C)
+        dispatch = slot_oh.sum(2)                              # (G, S, E, C)
+        combine = (slot_oh * gval.astype(x.dtype)[..., None, None]).sum(2)
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch, x)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["e_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, p["e_up"])
+        ye = jnp.einsum("gecf,efd->gecd", h, p["e_down"])
+        return jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+    # ---- sort-based dispatch, group-local ------------------------------------
+    # The sort/scatter runs independently per group (vmap over G) so GSPMD
+    # keeps it local to each batch shard — a single global sort would be
+    # replicated/communicated across the whole mesh.  Per-group capacity
+    # C = S·k/E·cf; the (G, E, C, D) buffers then meet the model-sharded
+    # expert weights in the FFN einsum (all-to-all under expert parallelism).
+    C = int(np.ceil(S * k / e * cfg.capacity_factor))
+
+    def dispatch_group(xg, gi, gv):
+        e_flat = gi.reshape(S * k)
+        w_flat = gv.reshape(S * k).astype(x.dtype)
+        order = jnp.argsort(e_flat)                    # stable
+        tok = order // k
+        e_sorted = e_flat[order]
+        w_sorted = w_flat[order]
+        starts = jnp.searchsorted(e_sorted, jnp.arange(e))
+        pos = jnp.arange(S * k) - starts[e_sorted]
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, C)                # OOB slot → dropped
+        src = xg[tok] * keep[:, None].astype(x.dtype)
+        # 3-D scatter keeps the expert dim visible so GSPMD can shard the
+        # buffer over the expert-parallel axis (a flat (E·C, D) scatter
+        # forces full replication over 'model').
+        buf = jnp.zeros((e, C + 1, d), x.dtype).at[e_sorted, pos_c].add(
+            src, mode="drop")[:, :C]
+        return buf, (tok, e_sorted, pos_c, w_sorted, keep)
+
+    buf, aux = jax.vmap(dispatch_group)(x, gidx, gval)     # (G, E, C, D)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["e_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["e_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["e_down"])      # (G, E, C, D)
+
+    def combine_group(yeg, auxg):
+        tok, e_sorted, pos_c, w_sorted, keep = auxg
+        contrib = yeg[e_sorted, jnp.minimum(pos_c, C - 1)] \
+            * (w_sorted * keep.astype(x.dtype))[:, None]
+        return jnp.zeros((S, d), x.dtype).at[tok].add(contrib, mode="drop")
+
+    return jax.vmap(combine_group)(ye, aux)
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective scan, chunked)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key: jax.Array, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.expand * d
+    n = cfg.d_state
+    dt_rank = max(d // 16, 1)
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * din), dt),
+        "conv_w": init_dense(ks[1], (din, cfg.d_conv), dt, scale=0.5),
+        "x_proj": init_dense(ks[2], (din, dt_rank + 2 * n), dt),
+        "dt_proj": init_dense(ks[3], (dt_rank, din), dt),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (din, 1))),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": init_dense(ks[5], (din, d), dt,
+                               scale=1.0 / np.sqrt(din * 2 * cfg.n_layers)),
+    }
+
+
+def _selective_scan_chunk(A: jnp.ndarray, Bx: jnp.ndarray,
+                          h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = A_t ⊙ h_{t-1} + Bx_t over a chunk via associative scan.
+
+    A, Bx: (B, T, din, N) f32; h0: (B, din, N).  Returns (h_all, h_last).
+    """
+    def comb(a, b):
+        a1, x1 = a
+        a2, x2 = b
+        return a1 * a2, x2 + a2 * x1
+    aa, hh = jax.lax.associative_scan(comb, (A, Bx), axis=1)
+    h_all = hh + aa * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def apply_mamba(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+                state: Optional[Params] = None, chunk: int = 256
+                ) -> Tuple[jnp.ndarray, Params]:
+    """x: (B, S, D).  state: {"h": (B, din, N), "conv": (B, k-1, din)}."""
+    B, S, d = x.shape
+    din = cfg.expand * d
+    n = cfg.d_state
+    dt_rank = max(d // 16, 1)
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                      # (B, S, din)
+
+    # Depthwise causal conv (k taps) with carried context.
+    kk = cfg.d_conv
+    if state is not None:
+        ctx = state["conv"]
+    else:
+        ctx = jnp.zeros((B, kk - 1, din), xs.dtype)
+    xpad = jnp.concatenate([ctx, xs], axis=1)
+    conv = sum(xpad[:, i:i + S] * p["conv_w"][:, i] for i in range(kk))
+    new_conv = xpad[:, -(kk - 1):] if kk > 1 else ctx
+    u = jax.nn.silu(conv)                                  # (B, S, din)
+
+    proj = u @ p["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dt_in @ p["dt_proj"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                               # (din, N)
+    dA = jnp.exp(delta[..., None] * A)                     # (B, S, din, N)
+    dBx = (delta * u.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[..., None, :]             # (B, S, din, N)
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, din, n),
+                                                        jnp.float32)
+    n_chunks = max(S // chunk, 1)
+    if S % chunk == 0 and n_chunks > 1:
+        dA_c = dA.reshape(B, n_chunks, chunk, din, n).transpose(1, 0, 2, 3, 4)
+        dBx_c = dBx.reshape(B, n_chunks, chunk, din, n).transpose(1, 0, 2, 3, 4)
+
+        def chunk_step(h, ab):
+            h_all, h_last = _selective_scan_chunk(ab[0], ab[1], h)
+            return h_last, h_all
+        # Carry h across chunks sequentially; parallel scan within chunks
+        # bounds the materialized state to (B, chunk, din, N).
+        h_last, h_seq = jax.lax.scan(chunk_step, h0, (dA_c, dBx_c))
+        h_all = h_seq.transpose(1, 0, 2, 3, 4).reshape(B, S, din, n)
+    else:
+        h_all, h_last = _selective_scan_chunk(dA, dBx, h0)
+
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cc.astype(jnp.float32))
+    y = y + u.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, {"h": h_last, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay linear attention + channel mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key: jax.Array, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 8)
+    return {
+        "r_proj": init_dense(ks[0], (d, d), dt),
+        "k_proj": init_dense(ks[1], (d, d), dt),
+        "v_proj": init_dense(ks[2], (d, d), dt),
+        "g_proj": init_dense(ks[3], (d, d), dt),
+        "w_proj": init_dense(ks[4], (d, d), dt, scale=0.1),
+        "w_bias": jnp.full((d,), -2.0, jnp.float32),
+        "o_proj": init_dense(ks[5], (d, d), dt,
+                             scale=1.0 / np.sqrt(d * 2 * cfg.n_layers)),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "ck_proj": init_dense(ks[6], (d, f), dt),
+        "cv_proj": init_dense(ks[7], (f, d), dt,
+                              scale=1.0 / np.sqrt(f * 2 * cfg.n_layers)),
+    }
+
+
+def apply_rwkv_time(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+                    state: Optional[Params] = None, chunk: int = 128
+                    ) -> Tuple[jnp.ndarray, Params]:
+    """RWKV6 time-mix.  x: (B, S, D).
+
+    state: {"S": (B, H, Dh, Dh) wkv state, "x_prev": (B, 1, D)}.
+    Matrix-valued state S accumulates kᵀv with per-channel data-dependent
+    decay w_t (the Finch upgrade over static decay).
+    """
+    B, S, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    x_prev = state["x_prev"] if state is not None else \
+        jnp.zeros((B, 1, d), x.dtype)
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)      # token shift
+
+    def mix(mu):
+        return x + (xs - x) * mu
+    r = (mix(p["mu_r"]) @ p["r_proj"]).reshape(B, S, H, dh)
+    k = (mix(p["mu_k"]) @ p["k_proj"]).reshape(B, S, H, dh)
+    v = (mix(p["mu_v"]) @ p["v_proj"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(x @ p["g_proj"])
+    w = jnp.exp(-jnp.exp((mix(p["mu_w"]) @ p["w_proj"]).astype(jnp.float32)
+                         + p["w_bias"]))                   # (B, S, D) decay
+    w = w.reshape(B, S, H, dh)
+
+    S0 = state["S"] if state is not None else \
+        jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+
+    if cfg.rwkv_impl == "chunked" and S > 1 and S % cfg.rwkv_chunk == 0:
+        y, S_last = rwkv_wkv_chunked(w, kf, vf, rf, S0, chunk=cfg.rwkv_chunk)
+        y = y.reshape(B, S, d)
+    else:
+        def step(Sm, inp):
+            wt, kt, vt, rt = inp                 # (B, H, dh) each
+            out = jnp.einsum("bhk,bhkv->bhv", rt, Sm)
+            Sm = Sm * wt[..., None] + kt[..., None] * vt[..., None, :]
+            return Sm, out
+        S_last, y = jax.lax.scan(
+            step, S0,
+            (w.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+             vf.transpose(1, 0, 2, 3), rf.transpose(1, 0, 2, 3)))
+        y = y.transpose(1, 0, 2, 3).reshape(B, S, d)
+    y = (y.astype(x.dtype) * g) @ p["o_proj"]
+    return y, {"S": S_last, "x_prev": x[:, -1:]}
+
+
+def apply_rwkv_channel(cfg: ArchConfig, p: Params, x: jnp.ndarray
+                       ) -> jnp.ndarray:
+    h = jnp.square(jax.nn.relu(x @ p["ck_proj"]))
+    return h @ p["cv_proj"]
+
+
+def rwkv_wkv_chunked(w: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     r: jnp.ndarray, S0: jnp.ndarray, chunk: int = 64
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked-parallel WKV recurrence (the TPU-native RWKV form).
+
+    Replaces the per-timestep scan (which materializes the matrix state S
+    times and is hopelessly HBM-bound) with the GLA/RWKV chunk form: within
+    a chunk of C steps the decay-weighted interactions become two MXU
+    matmuls via log-space decay rescaling; the matrix state is carried only
+    across S/C chunk boundaries.  Chunk size bounds the exp() dynamic range
+    (C·|log w| ≤ ~40 in f32 for C = 64).
+
+    w, k, v, r: (B, S, H, Dh) with w ∈ (0, 1); S0: (B, H, Dh, Dh).
+    Returns (out (B, S, H, Dh), S_last).
+    """
+    B, S, H, Dh = k.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    n_chunks = S // C
+
+    def to_chunks(x):
+        return x.reshape(B, n_chunks, C, H, Dh).transpose(1, 0, 3, 2, 4)
+    wc, kc, vc, rc = map(to_chunks, (w, k, v, r))   # (N, B, H, C, Dh)
+    logw = jnp.log(jnp.clip(wc.astype(jnp.float32), 1e-12, 1.0))
+    # L[t] = Σ_{u≤t} log w_u within the chunk (inclusive).
+    L = jnp.cumsum(logw, axis=3)                    # (N, B, H, C, Dh)
+
+    def chunk_step(Sm, inp):
+        Lc, kcb, vcb, rcb = inp                     # (B, H, C, Dh)
+        kf = kcb.astype(jnp.float32)
+        vf = vcb.astype(jnp.float32)
+        rf = rcb.astype(jnp.float32)
+        # Σ_{u<t} convention: state S_prev contributes with decay through
+        # steps 1..t-1 → exp(L_{t-1}); within-chunk pair (s < t) decays
+        # exp(L_{t-1} - L_s).
+        Lprev = jnp.concatenate(
+            [jnp.zeros_like(Lc[..., :1, :]), Lc[..., :-1, :]], axis=2)
+        r_dec = rf * jnp.exp(Lprev)                  # (B, H, C, Dh)
+        k_dec = kf * jnp.exp(-Lc)
+        att = jnp.einsum("bhtd,bhsd->bhts", r_dec, k_dec)
+        tri = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)
+        att = att * tri
+        intra = jnp.einsum("bhts,bhsd->bhtd", att, vf)
+        inter = jnp.einsum("bhtd,bhdv->bhtv", r_dec, Sm)
+        out = intra + inter
+        # State to chunk end: decay through the whole chunk.
+        Lend = Lc[..., -1:, :]
+        S_new = Sm * jnp.exp(Lend[..., 0, :, None]) + jnp.einsum(
+            "bhsd,bhsv->bhdv", kf * jnp.exp(Lend - Lc), vf)
+        return S_new, out
+
+    S_last, outs = jax.lax.scan(chunk_step, S0, (L, kc, vc, rc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dh)
+    return out, S_last

@@ -1,0 +1,240 @@
+"""Shared architecture machinery: configs, layers, init, sharding rules.
+
+All 10 assigned architectures are built from these primitives.  Parameters
+are nested dicts of jnp arrays; scan-stacked layer parameters carry a
+leading L axis.  Sharding is assigned by leaf-path pattern rules in
+:func:`param_specs`, with divisibility-checked fallbacks so e.g. a 2-KV-head
+model on a 16-way model axis degrades that dim to replicated instead of
+failing to lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+__all__ = ["ArchConfig", "rmsnorm", "rope", "param_specs", "batch_axes",
+           "init_dense", "DTYPES"]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture's full configuration (see src/repro/configs/)."""
+
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 → d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # Hybrid (jamba): attention layer every `attn_every` layers (else mamba);
+    # MoE MLP every `moe_every` layers (else dense MLP).
+    attn_every: int = 0
+    moe_every: int = 0
+    # Mamba (S6)
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    # RWKV6
+    rwkv_head_dim: int = 64
+    # Encoder–decoder (whisper): encoder layers + stub frontend length.
+    enc_layers: int = 0
+    enc_seq: int = 0
+    cross_attention: bool = False
+    # VLM: stub patch embeddings prepended to the token stream.
+    n_patches: int = 0
+    # Misc
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # Execution knobs (several are θ parameters of the cluster autotuner).
+    dtype: str = "bfloat16"
+    moment_dtype: str = "float32"
+    remat: str = "block"         # none | block
+    use_flash: bool = False      # Pallas flash-attention path (TPU)
+    window: int = 0              # sliding-window attention (0 = full)
+    act_shard_model: bool = True  # shard layer-scan carry over 'model'
+                                  # (saves HBM, costs per-layer all-gathers)
+    act_shard: str = ""           # "" → derived from act_shard_model;
+                                  # "model" (d_model dim) | "seq" (sequence
+                                  # parallelism: only K/V all-gathered at
+                                  # attention) | "none"
+    train_accum: int = 1          # gradient-accumulation microbatches
+    rwkv_impl: str = "scan"       # "scan" (per-step) | "chunked" (GLA form)
+    rwkv_chunk: int = 64          # chunk length for the GLA form (≤512:
+                                  # exp-range safety in f32)
+    pure_dp: bool = False         # no tensor parallelism: batch + FSDP span
+                                  # the whole mesh (small-d_model models
+                                  # where TP boundaries cost more than they
+                                  # save)
+
+    @property
+    def carry_sharding(self) -> str:
+        if self.act_shard:
+            return self.act_shard
+        return "model" if self.act_shard_model else "none"
+    # Which shapes this arch supports (see DESIGN.md §Arch-applicability).
+    supports_long: bool = False
+    decoder_only: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def n_params_dense(self) -> float:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        hd = self.head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d
+        mlp = 3 * d * f
+        per_layer = attn + mlp
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * per_layer + emb
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 1e4) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)           # (..., S,1,half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def init_dense(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Axes the global batch shards over ('pod' extends 'data')."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+# (path regex, spec WITHOUT the leading scan axis).  'fsdp' resolves to the
+# 'data' axis, 'tp' to 'model'.
+_RULES = [
+    (r"embed$", ("tp", "fsdp")),            # (V, D)
+    (r"pos_embed$", (None, "fsdp")),        # (S, D)
+    (r"lm_head$", ("fsdp", "tp")),          # (D, V)
+    (r"(wq|wk|wv)$", ("fsdp", "tp")),       # (D, H·Dh)
+    (r"(bq|bk|bv)$", ("tp",)),              # (H·Dh,)
+    (r"wo$", ("tp", "fsdp")),               # (H·Dh, D)
+    (r"(w_gate|w_up)$", ("fsdp", "tp")),    # (D, F)
+    (r"w_down$", ("tp", "fsdp")),           # (F, D)
+    (r"router$", ("fsdp", None)),           # (D, E)
+    (r"(e_gate|e_up)$", ("tp", "fsdp", None)),   # (E, D, F) expert parallel
+    (r"e_down$", ("tp", None, "fsdp")),     # (E, F, D)
+    (r"in_proj$", ("fsdp", "tp")),          # mamba (D, 2·d_in)
+    (r"conv_w$", ("tp", None)),             # (d_in, k)
+    (r"x_proj$", ("tp", None)),             # (d_in, dt_rank + 2N)
+    (r"dt_proj$", (None, "tp")),            # (dt_rank, d_in)
+    (r"A_log$", ("tp", None)),              # (d_in, N)
+    (r"D$", ("tp",)),                       # (d_in,)
+    (r"out_proj$", ("tp", "fsdp")),         # (d_in, D)
+    (r"(r_proj|k_proj|v_proj|g_proj|o_proj)$", ("fsdp", "tp")),  # rwkv (D, D)
+    (r"w_proj$", ("fsdp", "tp")),           # rwkv decay (D, D)
+    (r"(mu_.*|w_bias)$", ("tp",)),          # rwkv per-channel params (D,)
+    (r"(ck_proj)$", ("fsdp", "tp")),        # rwkv channel-mix (D, F)
+    (r"(cv_proj)$", ("tp", "fsdp")),        # rwkv channel-mix (F, D)
+    (r"(norm.*|scale|ln_.*)$", (None,)),    # norms replicated
+]
+
+
+def _resolve(axis: Optional[str], mesh, pure_dp: bool):
+    if axis == "fsdp":
+        if pure_dp:
+            both = tuple(a for a in ("data", "model")
+                         if a in mesh.axis_names)
+            return both or None
+        return "data" if "data" in mesh.axis_names else None
+    if axis == "tp":
+        if pure_dp:
+            return None
+        return "model" if "model" in mesh.axis_names else None
+    return axis
+
+
+def param_specs(params: Params, mesh, *, pure_dp: bool = False) -> Params:
+    """Same-structure tree of PartitionSpec chosen by leaf-path rules.
+
+    Leading scan (layer-stack) axes — detected as leaf rank exceeding the
+    rule's length — map to None.  Any sharded dim whose size is not
+    divisible by the mesh-axis size falls back to replicated on that dim.
+    ``pure_dp`` drops tensor parallelism: FSDP spans data×model.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axsize(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            return int(np.prod([sizes.get(a, 1) for a in ax]))
+        return sizes.get(ax, 1)
+
+    def leaf_spec(path: str, x) -> P:
+        shape = x.shape
+        for pat, spec in _RULES:
+            if re.search(pat, path):
+                axes = [_resolve(a, mesh, pure_dp) for a in spec]
+                pad = len(shape) - len(axes)
+                axes = [None] * pad + axes
+                fixed = []
+                for dim, ax in zip(shape, axes):
+                    if ax is not None and dim % axsize(ax) != 0:
+                        ax = None
+                    fixed.append(ax)
+                return P(*fixed)
+        return P()  # replicate by default
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for kp, x in flat:
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        specs.append(leaf_spec(path, x))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,166 @@
+"""Encoder–decoder LM (whisper-base backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_seq, D); the encoder is a
+bidirectional transformer over them, the decoder a causal transformer with
+cross-attention.  Decoder self-attention KV is cached for decode; encoder
+output is computed at prefill and carried in the cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import (apply_attention, apply_mlp, init_attention, init_mlp)
+from .common import ArchConfig, DTYPES, init_dense, rmsnorm
+from .lm import ModelApi, _stack_init
+
+Params = Dict[str, Any]
+
+__all__ = ["build_encdec"]
+
+
+def _xattn_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 4)
+    return {"wq": init_dense(ks[0], (d, h * dh), dt),
+            "wk": init_dense(ks[1], (d, h * dh), dt),
+            "wv": init_dense(ks[2], (d, h * dh), dt),
+            "wo": init_dense(ks[3], (h * dh, d), dt,
+                             scale=1.0 / np.sqrt(h * dh * 2 * cfg.n_layers))}
+
+
+def _xattn_apply(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+                 enc_out: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    Se = enc_out.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = (enc_out @ p["wk"]).reshape(B, Se, h, dh).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"]).reshape(B, Se, h, dh).transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(dh)
+    w = jax.nn.softmax(logits, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    y = y.astype(x.dtype).transpose(0, 2, 1, 3).reshape(B, S, h * dh)
+    return y @ p["wo"]
+
+
+def _enc_layer_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_mlp": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_attention(k1, cfg),
+            "mlp": init_mlp(k2, cfg)}
+
+
+def _dec_layer_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_mlp": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_attention(k1, cfg),
+            "xattn": _xattn_init(k2, cfg),
+            "mlp": init_mlp(k3, cfg)}
+
+
+def build_encdec(cfg: ArchConfig) -> ModelApi:
+    dt = DTYPES[cfg.dtype]
+
+    def init(key: jax.Array) -> Params:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "embed": init_dense(k1, (cfg.vocab, cfg.d_model), dt, 0.02),
+            "lm_head": init_dense(k2, (cfg.d_model, cfg.vocab), dt),
+            "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm_enc": jnp.ones((cfg.d_model,), jnp.float32),
+            "enc_layers": _stack_init(lambda k: _enc_layer_init(k, cfg),
+                                      k3, cfg.enc_layers),
+            "dec_layers": _stack_init(lambda k: _dec_layer_init(k, cfg),
+                                      k4, cfg.n_layers),
+        }
+
+    def encode(params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+        B, Se, _ = frames.shape
+        x = frames.astype(dt)
+        pos = jnp.broadcast_to(jnp.arange(Se), (B, Se))
+
+        def body(carry, lp):
+            h, _ = apply_attention(
+                cfg, lp["attn"], rmsnorm(carry, lp["ln_attn"], cfg.norm_eps),
+                pos, causal=False)
+            y = carry + h
+            y = y + apply_mlp(cfg, lp["mlp"],
+                              rmsnorm(y, lp["ln_mlp"], cfg.norm_eps))
+            return y, None
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rmsnorm(x, params["norm_enc"], cfg.norm_eps)
+
+    def forward(params: Params, tokens: jnp.ndarray,
+                patches: Optional[jnp.ndarray] = None,   # = frames
+                caches=None, positions: Optional[jnp.ndarray] = None,
+                last_only: bool = False
+                ) -> Tuple[jnp.ndarray, Any]:
+        B, S = tokens.shape
+        if patches is not None:
+            # Fresh frames → (re)encode; otherwise reuse the cached encoder
+            # output from prefill.
+            enc_out = encode(params, patches)
+            dec_caches = None if caches is None else caches["dec"]
+        else:
+            assert caches is not None and "enc_out" in caches, \
+                "decode without frames requires a prefilled cache"
+            enc_out = caches["enc_out"]
+            dec_caches = caches["dec"]
+        x = params["embed"][tokens]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def body(carry, inp):
+            lp, lc = inp
+            h, nc = apply_attention(
+                cfg, lp["attn"], rmsnorm(carry, lp["ln_attn"], cfg.norm_eps),
+                positions, cache=lc)
+            y = carry + h
+            y = y + _xattn_apply(cfg, lp["xattn"],
+                                 rmsnorm(y, lp["ln_x"], cfg.norm_eps),
+                                 enc_out)
+            y = y + apply_mlp(cfg, lp["mlp"],
+                              rmsnorm(y, lp["ln_mlp"], cfg.norm_eps))
+            return y, nc
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        x, new_dec = jax.lax.scan(body, x, (params["dec_layers"], dec_caches))
+        if last_only:
+            x = x[:, -1:]
+        x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+        logits = x @ params["lm_head"]
+        return logits, {"enc_out": enc_out, "dec": new_dec}
+
+    def loss(params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        logits, _ = forward(params, batch["tokens"],
+                            patches=batch["patches"])
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    def init_cache(batch: int, max_len: int):
+        hkv, dh = cfg.n_kv, cfg.head_dim
+        attn = {"k": jnp.zeros((batch, hkv, max_len, dh), dt),
+                "v": jnp.zeros((batch, hkv, max_len, dh), dt),
+                "len": jnp.zeros((), jnp.int32)}
+        dec = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), attn)
+        return {"enc_out": jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dt),
+                "dec": dec}
+
+    return ModelApi(cfg=cfg, init=init, forward=forward, loss=loss,
+                    init_cache=init_cache)

@@ -1,0 +1,371 @@
+"""Decoder-only language models: dense / MoE / hybrid (jamba) / RWKV / VLM.
+
+Layers are scan-stacked (leading L axis) for compact HLO and fast multi-pod
+compilation; hybrid models scan over *groups* (one attention layer + 7 Mamba
+layers with alternating dense/MoE MLPs — the Jamba 1:7 interleave) so the
+stack stays homogeneous.  ``remat="block"`` wraps each scanned body in
+``jax.checkpoint`` — the activation-memory knob the cluster autotuner tunes.
+
+The public surface is :class:`ModelApi`: init / forward / loss / init_cache,
+all pure functions safe under ``jax.eval_shape`` (the multi-pod dry-run never
+materializes parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .act_sharding import BATCH_AXES, constrain
+from .blocks import (apply_attention, apply_mamba, apply_mlp, apply_moe,
+                     apply_rwkv_channel, apply_rwkv_time, init_attention,
+                     init_mamba, init_mlp, init_moe, init_rwkv)
+from .common import ArchConfig, DTYPES, init_dense, rmsnorm
+
+Params = Dict[str, Any]
+
+__all__ = ["ModelApi", "build_lm"]
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Params]
+    forward: Callable[..., Tuple[jnp.ndarray, Any]]
+    loss: Callable[[Params, Dict[str, jnp.ndarray]], jnp.ndarray]
+    init_cache: Callable[[int, int], Any]
+
+
+def _stack_init(fn: Callable[[jax.Array], Params], key: jax.Array,
+                n: int) -> Params:
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _tree_idx(tree: Params, i) -> Params:
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+def _attn_layer_init(key: jax.Array, cfg: ArchConfig, moe: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln_mlp": jnp.ones((cfg.d_model,), jnp.float32),
+         "attn": init_attention(k1, cfg)}
+    p["mlp"] = init_moe(k2, cfg) if moe else init_mlp(k2, cfg)
+    return p
+
+
+def _attn_layer_apply(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+                      positions: jnp.ndarray, cache, moe: bool):
+    h, new_cache = apply_attention(
+        cfg, p["attn"], rmsnorm(x, p["ln_attn"], cfg.norm_eps), positions,
+        cache=cache)
+    x = x + h
+    hn = rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + (apply_moe(cfg, p["mlp"], hn) if moe
+             else apply_mlp(cfg, p["mlp"], hn))
+    return x, new_cache
+
+
+def _mamba_layer_init(key: jax.Array, cfg: ArchConfig, moe: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln_mlp": jnp.ones((cfg.d_model,), jnp.float32),
+         "mamba": init_mamba(k1, cfg)}
+    p["mlp"] = init_moe(k2, cfg) if moe else init_mlp(k2, cfg)
+    return p
+
+
+def _mamba_layer_apply(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+                       state, moe: bool):
+    h, new_state = apply_mamba(
+        cfg, p["mamba"], rmsnorm(x, p["ln_attn"], cfg.norm_eps), state)
+    x = x + h
+    hn = rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + (apply_moe(cfg, p["mlp"], hn) if moe
+             else apply_mlp(cfg, p["mlp"], hn))
+    return x, new_state
+
+
+def _rwkv_layer_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    return {"ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_mlp": jnp.ones((cfg.d_model,), jnp.float32),
+            "rwkv": init_rwkv(key, cfg)}
+
+
+def _rwkv_layer_apply(cfg: ArchConfig, p: Params, x: jnp.ndarray, state):
+    h, new_state = apply_rwkv_time(
+        cfg, p["rwkv"], rmsnorm(x, p["ln_attn"], cfg.norm_eps), state)
+    x = x + h
+    x = x + apply_rwkv_channel(
+        cfg, p["rwkv"], rmsnorm(x, p["ln_mlp"], cfg.norm_eps))
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (jamba) group: [attn, mamba×(attn_every-1)], MLP alternates
+# dense (even global layer) / MoE (odd global layer).
+# ---------------------------------------------------------------------------
+
+def _group_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    ae = cfg.attn_every
+    n_mamba = ae - 1
+    keys = jax.random.split(key, ae)
+    p = {"attn_layer": _attn_layer_init(keys[0], cfg, moe=False)}
+    # Positions 1..ae-1 are mamba; MoE on odd positions.
+    moe_pos = [i for i in range(1, ae) if i % cfg.moe_every == 1 or
+               cfg.moe_every == 1]
+    dense_pos = [i for i in range(1, ae) if i not in moe_pos]
+    if moe_pos:
+        p["mamba_moe"] = _stack_init(
+            lambda k: _mamba_layer_init(k, cfg, moe=True),
+            keys[1], len(moe_pos))
+    if dense_pos:
+        p["mamba_dense"] = _stack_init(
+            lambda k: _mamba_layer_init(k, cfg, moe=False),
+            keys[2], len(dense_pos))
+    return p
+
+
+def _group_apply(cfg: ArchConfig, gp: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray, gc):
+    ae = cfg.attn_every
+    moe_pos = [i for i in range(1, ae) if i % cfg.moe_every == 1 or
+               cfg.moe_every == 1]
+    dense_pos = [i for i in range(1, ae) if i not in moe_pos]
+    x, c_attn = _attn_layer_apply(
+        cfg, gp["attn_layer"], x, positions,
+        None if gc is None else gc["attn"], moe=False)
+    new_c: Dict[str, Any] = {"attn": c_attn, "moe": [], "dense": []}
+    im = ide = 0
+    for i in range(1, ae):
+        if i in moe_pos:
+            st = None if gc is None else _tree_idx(gc["moe"], im)
+            x, ns = _mamba_layer_apply(
+                cfg, _tree_idx(gp["mamba_moe"], im), x, st, moe=True)
+            new_c["moe"].append(ns)
+            im += 1
+        else:
+            st = None if gc is None else _tree_idx(gc["dense"], ide)
+            x, ns = _mamba_layer_apply(
+                cfg, _tree_idx(gp["mamba_dense"], ide), x, st, moe=False)
+            new_c["dense"].append(ns)
+            ide += 1
+    stack = lambda lst: (jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *lst) if lst else None)
+    return x, {"attn": new_c["attn"], "moe": stack(new_c["moe"]),
+               "dense": stack(new_c["dense"])}
+
+
+# ---------------------------------------------------------------------------
+# Model assembly
+# ---------------------------------------------------------------------------
+
+def build_lm(cfg: ArchConfig) -> ModelApi:
+    dt = DTYPES[cfg.dtype]
+    fam = cfg.family
+    if fam == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        n_stack = cfg.n_layers // cfg.attn_every
+    else:
+        n_stack = cfg.n_layers
+
+    # ---- init ---------------------------------------------------------------
+    def init(key: jax.Array) -> Params:
+        k_emb, k_layers, k_head = jax.random.split(key, 3)
+        p: Params = {
+            "embed": init_dense(k_emb, (cfg.vocab, cfg.d_model), dt, 0.02),
+            "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init_dense(k_head, (cfg.d_model, cfg.vocab), dt)
+        if fam in ("dense", "vlm"):
+            p["layers"] = _stack_init(
+                lambda k: _attn_layer_init(k, cfg, moe=False),
+                k_layers, n_stack)
+        elif fam == "moe":
+            p["layers"] = _stack_init(
+                lambda k: _attn_layer_init(k, cfg, moe=True),
+                k_layers, n_stack)
+        elif fam == "hybrid":
+            p["layers"] = _stack_init(
+                lambda k: _group_init(k, cfg), k_layers, n_stack)
+        elif fam == "ssm":
+            p["layers"] = _stack_init(
+                lambda k: _rwkv_layer_init(k, cfg), k_layers, n_stack)
+        else:
+            raise ValueError(fam)
+        return p
+
+    # ---- layer-stack application ---------------------------------------------
+    def run_layers(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                   caches):
+        is_moe = fam == "moe"
+
+        baxes = BATCH_AXES + ("model",) if cfg.pure_dp else BATCH_AXES
+
+        def shard(y):
+            # Shard the scan carry (== the per-layer saved activation under
+            # remat).  "model": split d_model over TP — cheap HBM, but every
+            # matmul input must be all-gathered.  "seq": sequence
+            # parallelism — layer math is token-local, only attention K/V
+            # (small under GQA) get gathered.  "none": batch axes only.
+            mode = "none" if cfg.pure_dp else cfg.carry_sharding
+            if mode == "model":
+                return constrain(y, baxes, None, "model")
+            if mode == "seq":
+                return constrain(y, baxes, "model", None)
+            return constrain(y, baxes, None, None)
+
+        if fam in ("dense", "vlm", "moe"):
+            def body(carry, inp):
+                lp, lc = inp
+                y, nc = _attn_layer_apply(cfg, lp, carry, positions, lc,
+                                          moe=is_moe)
+                return shard(y), nc
+        elif fam == "hybrid":
+            def body(carry, inp):
+                lp, lc = inp
+                y, nc = _group_apply(cfg, lp, carry, positions, lc)
+                return shard(y), nc
+        else:  # ssm
+            def body(carry, inp):
+                lp, lc = inp
+                y, nc = _rwkv_layer_apply(cfg, lp, carry, lc)
+                return shard(y), nc
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        x, new_caches = jax.lax.scan(body, shard(x), (params["layers"],
+                                                      caches))
+        return x, new_caches
+
+    # ---- forward --------------------------------------------------------------
+    def forward(params: Params, tokens: jnp.ndarray,
+                patches: Optional[jnp.ndarray] = None,
+                caches=None,
+                positions: Optional[jnp.ndarray] = None,
+                last_only: bool = False
+                ) -> Tuple[jnp.ndarray, Any]:
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        if fam == "vlm" and patches is not None:
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                         (B, x.shape[1]))
+        x, new_caches = run_layers(params, x, positions, caches)
+        if fam == "vlm" and patches is not None:
+            x = x[:, patches.shape[1]:]
+        if last_only:
+            x = x[:, -1:]   # serve prefill: only next-token logits needed
+        x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head
+        return logits, new_caches
+
+    # ---- loss -------------------------------------------------------------------
+    def _hidden(params: Params, tokens, patches):
+        """Final normed hidden states (B, S, D) — shared by loss paths."""
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        if fam == "vlm" and patches is not None:
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                     (B, x.shape[1]))
+        x, _ = run_layers(params, x, positions, None)
+        if fam == "vlm" and patches is not None:
+            x = x[:, patches.shape[1]:]
+        return rmsnorm(x, params["norm_f"], cfg.norm_eps)
+
+    # Sequence-chunked CE above this many logit elements: never materialize
+    # the full (B, S, V) f32 logits (5+ GB/device at 4k × 150k vocab).
+    # Chunks are kept as large as memory allows — each chunk costs one
+    # vocab-sharded head-gradient all-reduce in backward, so over-chunking
+    # (e.g. 1024 tiny chunks) multiplies collective traffic ~30×.
+    CE_CHUNK_THRESHOLD = 1 << 31
+
+    def loss(params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        B, S = tokens.shape
+        x = _hidden(params, tokens, batch.get("patches"))
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+
+        def ce(xc, lc):
+            logits = (xc @ head).astype(jnp.float32)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logp, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+            mask = (lc >= 0).astype(jnp.float32)
+            return (-(ll * mask).sum(), mask.sum())
+
+        n_chunks = 1
+        while (B * S // n_chunks) * cfg.vocab > CE_CHUNK_THRESHOLD \
+                and (S % (2 * n_chunks)) == 0:
+            n_chunks *= 2
+        if n_chunks == 1:
+            tot, cnt = ce(x, labels)
+        else:
+            xc = x.reshape(B, n_chunks, S // n_chunks, -1).swapaxes(0, 1)
+            lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+            def body(carry, inp):
+                t, c = carry
+                dt_, dc = jax.checkpoint(ce)(*inp)
+                return (t + dt_, c + dc), None
+            (tot, cnt), _ = jax.lax.scan(
+                body, (jnp.zeros(()), jnp.zeros(())), (xc, lc))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # ---- cache init ----------------------------------------------------------------
+    def init_cache(batch: int, max_len: int):
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+        C = min(max_len, cfg.window) if cfg.window else max_len
+
+        def attn_cache():
+            return {"k": jnp.zeros((batch, hkv, C, dh), dt),
+                    "v": jnp.zeros((batch, hkv, C, dh), dt),
+                    "len": jnp.zeros((), jnp.int32)}
+
+        def mamba_cache():
+            din = cfg.expand * cfg.d_model
+            return {"h": jnp.zeros((batch, din, cfg.d_state), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.d_conv - 1, din), dt)}
+
+        def rwkv_cache():
+            H = cfg.d_model // cfg.rwkv_head_dim
+            return {"S": jnp.zeros((batch, H, cfg.rwkv_head_dim,
+                                    cfg.rwkv_head_dim), jnp.float32),
+                    "x_prev": jnp.zeros((batch, 1, cfg.d_model), dt)}
+
+        def rep(tree, n):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+        if fam in ("dense", "vlm", "moe"):
+            return rep(attn_cache(), n_stack)
+        if fam == "ssm":
+            return rep(rwkv_cache(), n_stack)
+        if fam == "hybrid":
+            ae = cfg.attn_every
+            moe_pos = [i for i in range(1, ae) if i % cfg.moe_every == 1 or
+                       cfg.moe_every == 1]
+            n_moe, n_dense = len(moe_pos), ae - 1 - len(moe_pos)
+            group = {"attn": attn_cache(),
+                     "moe": rep(mamba_cache(), n_moe) if n_moe else None,
+                     "dense": rep(mamba_cache(), n_dense) if n_dense else None}
+            return rep(group, n_stack)
+        raise ValueError(fam)
+
+    return ModelApi(cfg=cfg, init=init, forward=forward, loss=loss,
+                    init_cache=init_cache)

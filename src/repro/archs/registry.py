@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` → ModelApi."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .common import ArchConfig
+from .encdec import build_encdec
+from .lm import ModelApi, build_lm
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "build_model"]
+
+ARCH_IDS: List[str] = [
+    "minicpm-2b",
+    "deepseek-coder-33b",
+    "glm4-9b",
+    "qwen2-72b",
+    "dbrx-132b",
+    "moonshot-v1-16b-a3b",
+    "jamba-1.5-large-398b",
+    "rwkv6-1.6b",
+    "whisper-base",
+    "internvl2-76b",
+]
+
+
+def _module(arch_id: str):
+    mod_name = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(arch_id: str, **overrides) -> ArchConfig:
+    cfg = _module(arch_id).config()
+    return cfg.with_(**overrides) if overrides else cfg
+
+
+def get_smoke_config(arch_id: str, **overrides) -> ArchConfig:
+    cfg = _module(arch_id).smoke_config()
+    return cfg.with_(**overrides) if overrides else cfg
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family == "audio":
+        return build_encdec(cfg)
+    return build_lm(cfg)

@@ -1,0 +1,178 @@
+"""GTN-embedder + regressor performance models (paper Fig. 6).
+
+One :class:`PerfModel` per modeling target:
+
+* ``subq`` — compile time: subQ operator group with CBO cardinalities;
+  decision vars θc⊕θp⊕θs (19); α from CBO, β = 0, γ = 0.
+* ``qs``   — runtime query stage: true cardinalities; θp dropped (already
+  fixed when a QS is optimized) → θc⊕θs (10); α/β/γ observed.
+* ``lqp``  — runtime collapsed plan: whole-plan graph; θc⊕θp⊕θs; predicts
+  end-to-end latency of the (remaining) plan.
+
+Targets are predicted in log1p space: [latency (s), IO (GB)].
+
+The embedding of a plan/subQ does not depend on θ, so MOO solving caches the
+GTN output once per (query, stage) and sweeps thousands of θ rows through the
+small regressor — this is what makes sub-second solving feasible (paper's
+60–462K inference/s).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...queryengine.plan import Query
+from .features import batch_graphs, featurize_plan, featurize_subq
+from .gtn import GTNConfig, gtn_apply, gtn_apply_batch, gtn_init
+from .nn import Params, mlp, mlp_init
+
+__all__ = ["ModelConfig", "PerfModel", "NONDECISION_DIM"]
+
+ALPHA_DIM = 5
+BETA_DIM = 3
+GAMMA_DIM = 4
+NONDECISION_DIM = ALPHA_DIM + BETA_DIM + GAMMA_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    kind: str                      # "subq" | "qs" | "lqp"
+    theta_dim: int                 # 19 for subq/lqp, 10 for qs
+    gtn: GTNConfig = GTNConfig()
+    hidden: Tuple[int, ...] = (128, 96)
+    n_targets: int = 2
+
+    @property
+    def reg_in(self) -> int:
+        return self.gtn.d_model + self.theta_dim + NONDECISION_DIM
+
+    @property
+    def pad(self) -> int:
+        return 4 if self.kind in ("subq", "qs") else 128
+
+    @property
+    def use_est(self) -> bool:
+        return self.kind == "subq"
+
+
+TARGET_EPS = 1e-3
+
+
+class PerfModel:
+    """Parameter container + jitted apply/predict paths.
+
+    Targets are modeled in z-normalized log space:
+    ``z = (log(y + eps) - mu) / sd`` with (mu, sd) from the training split —
+    so optimizing the loss optimizes *relative* error across scales.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Optional[Params] = None,
+                 seed: int = 0,
+                 target_stats: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        if params is None:
+            key = jax.random.PRNGKey(seed)
+            k1, k2 = jax.random.split(key)
+            params = {
+                "gtn": gtn_init(k1, cfg.gtn),
+                "reg": mlp_init(k2, [cfg.reg_in, *cfg.hidden, cfg.n_targets]),
+            }
+        self.params = params
+        # (2, n_targets): row 0 = mu, row 1 = sd of log(y + eps).
+        if target_stats is None:
+            target_stats = np.stack([np.zeros(cfg.n_targets),
+                                     np.ones(cfg.n_targets)])
+        self.target_stats = np.asarray(target_stats, np.float32)
+        self._emb_cache: Dict[Any, np.ndarray] = {}
+
+        cfg_gtn = cfg.gtn
+
+        @jax.jit
+        def _embed_batch(p, X, pe, bias, mask):
+            return gtn_apply_batch(p["gtn"], cfg_gtn, X, pe, bias, mask)
+
+        @jax.jit
+        def _head(p, emb, theta, nond):
+            x = jnp.concatenate([emb, theta, nond], axis=-1)
+            return mlp(p["reg"], x)
+
+        self._embed_batch = _embed_batch
+        self._head = _head
+
+    # -- forward -------------------------------------------------------------
+    def apply_rows(self, params: Params, graphs, theta: jnp.ndarray,
+                   nond: jnp.ndarray) -> jnp.ndarray:
+        """Training path: embed per-row graphs and regress. Returns log1p y."""
+        X, pe, bias, mask = graphs
+        emb = gtn_apply_batch(params["gtn"], self.cfg.gtn, X, pe, bias, mask)
+        x = jnp.concatenate([emb, theta, nond], axis=-1)
+        return mlp(params["reg"], x)
+
+    # -- inference -----------------------------------------------------------
+    def embed(self, query: Query, sq_id: Optional[int] = None) -> np.ndarray:
+        """Cached GTN embedding for a subQ group or whole plan."""
+        key = (id(query), query.qid, sq_id, self.cfg.kind)
+        if key not in self._emb_cache:
+            if self.cfg.kind in ("subq", "qs"):
+                g = featurize_subq(query, sq_id, use_est=self.cfg.use_est,
+                                   n_pad=self.cfg.pad)
+            else:
+                g = featurize_plan(query, use_est=True, n_pad=self.cfg.pad)
+            gb = batch_graphs([g])
+            emb = self._embed_batch(self.params, gb.X, gb.pe, gb.bias,
+                                    gb.mask)
+            self._emb_cache[key] = np.asarray(emb[0])
+        return self._emb_cache[key]
+
+    # -- target transform ------------------------------------------------------
+    def to_z(self, y: np.ndarray) -> np.ndarray:
+        mu, sd = self.target_stats
+        return (np.log(np.maximum(y, 0.0) + TARGET_EPS) - mu) / sd
+
+    def from_z(self, z: np.ndarray) -> np.ndarray:
+        mu, sd = self.target_stats
+        return np.maximum(np.exp(z * sd + mu) - TARGET_EPS, 0.0)
+
+    def predict(self, emb: np.ndarray, theta: np.ndarray,
+                nond: np.ndarray) -> np.ndarray:
+        """(n, θd) unit θ + (n, 12) or (12,) nondecision → (n, 2) raw targets."""
+        theta = np.asarray(theta, np.float32)
+        n = theta.shape[0]
+        if nond.ndim == 1:
+            nond = np.broadcast_to(nond, (n, nond.shape[0]))
+        embb = np.broadcast_to(np.asarray(emb, np.float32), (n, emb.shape[0]))
+        z = self._head(self.params, embb, theta,
+                       np.asarray(nond, np.float32))
+        return self.from_z(np.asarray(z))
+
+    # -- persistence ----------------------------------------------------------
+    def save(self, path: str) -> None:
+        flat, treedef = jax.tree_util.tree_flatten(self.params)
+        np.savez(path, n=len(flat), target_stats=self.target_stats,
+                 **{f"a{i}": np.asarray(x) for i, x in enumerate(flat)})
+
+    @classmethod
+    def load(cls, cfg: ModelConfig, path: str) -> "PerfModel":
+        data = np.load(path)
+        proto = cls(cfg)  # for treedef
+        flat, treedef = jax.tree_util.tree_flatten(proto.params)
+        loaded = [jnp.asarray(data[f"a{i}"]) for i in range(int(data["n"]))]
+        params = jax.tree_util.tree_unflatten(treedef, loaded)
+        return cls(cfg, params=params, target_stats=data["target_stats"])
+
+
+def make_nondecision(alpha: np.ndarray, beta: Optional[np.ndarray] = None,
+                     gamma: Optional[np.ndarray] = None) -> np.ndarray:
+    """Assemble [α, β, γ] with paper's compile-time zeros convention."""
+    alpha = np.asarray(alpha, np.float32)
+    lead = alpha.shape[:-1]
+    if beta is None:
+        beta = np.zeros(lead + (BETA_DIM,), np.float32)
+    if gamma is None:
+        gamma = np.zeros(lead + (GAMMA_DIM,), np.float32)
+    return np.concatenate([alpha, beta, gamma], axis=-1).astype(np.float32)

@@ -1,0 +1,228 @@
+"""Training + evaluation for the three performance-model targets.
+
+Reproduces paper §6.1: traces split 8:1:1 by query, AdamW on Huber(log1p),
+metrics = WMAPE / P50 / P90 relative error / Pearson correlation / inference
+throughput (paper Table 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...queryengine.trace import TraceSet
+from .features import batch_graphs, featurize_plan, featurize_subq
+from .gtn import GTNConfig
+from .nn import adamw_init, adamw_update
+from .perf_model import (TARGET_EPS, ModelConfig, PerfModel,
+                         make_nondecision)
+
+__all__ = ["RowDataset", "build_dataset", "train_model", "evaluate",
+           "Metrics", "train_all_models"]
+
+
+@dataclasses.dataclass
+class RowDataset:
+    """Row-wise dataset with shared (deduplicated) graph tensors."""
+
+    graphs: Tuple[np.ndarray, ...]   # (G, N, ·) stacked graph tensors
+    graph_id: np.ndarray             # (S,) row -> graph index
+    theta: np.ndarray                # (S, θd) unit decision variables
+    nond: np.ndarray                 # (S, 12)
+    y: np.ndarray                    # (S, 2) raw targets
+    masks: Dict[str, np.ndarray]     # train/val/test row masks
+
+    def subset(self, name: str) -> "RowDataset":
+        m = self.masks[name]
+        return RowDataset(self.graphs, self.graph_id[m], self.theta[m],
+                          self.nond[m], self.y[m],
+                          {name: np.ones(m.sum(), bool)})
+
+    @property
+    def n(self) -> int:
+        return self.theta.shape[0]
+
+
+def _lqp_pad(traces: TraceSet) -> int:
+    mx = max(len(q.ops) for q in traces.queries)
+    return int(np.ceil(mx / 16) * 16)
+
+
+def build_dataset(traces: TraceSet, kind: str, seed: int = 0) -> Tuple[
+        RowDataset, ModelConfig]:
+    """Assemble the row dataset + model config for one target kind."""
+    splits = traces.split(seed=seed)
+    if kind in ("subq", "qs"):
+        use_est = kind == "subq"
+        pad = 4
+        # Distinct graphs: one per (query, subq).
+        keys = {}
+        glist = []
+        gid = np.zeros(traces.query_idx.shape[0], int)
+        for r, (qi, si) in enumerate(zip(traces.query_idx, traces.subq_idx)):
+            k = (int(qi), int(si))
+            if k not in keys:
+                keys[k] = len(glist)
+                glist.append(featurize_subq(traces.queries[qi], si,
+                                            use_est=use_est, n_pad=pad))
+            gid[r] = keys[k]
+        gb = batch_graphs(glist)
+        if kind == "subq":
+            theta = np.concatenate(
+                [traces.theta_c, traces.theta_p, traces.theta_s], -1)
+            nond = make_nondecision(traces.alpha_cbo)
+        else:
+            theta = np.concatenate([traces.theta_c, traces.theta_s], -1)
+            nond = make_nondecision(traces.alpha_true, traces.beta,
+                                    traces.gamma)
+        y = traces.y_subq
+        masks = {k: v[0] for k, v in splits.items()}
+    elif kind == "lqp":
+        pad = _lqp_pad(traces)
+        glist = [featurize_plan(q, use_est=False, n_pad=pad)
+                 for q in traces.queries]
+        gb = batch_graphs(glist)
+        gid = traces.q_query_idx.copy()
+        theta = np.concatenate(
+            [traces.q_theta_c, traces.q_theta_p, traces.q_theta_s], -1)
+        nond = make_nondecision(traces.q_alpha)
+        y = traces.y_query
+        masks = {k: v[1] for k, v in splits.items()}
+    else:
+        raise ValueError(kind)
+
+    ds = RowDataset((gb.X, gb.pe, gb.bias, gb.mask), gid,
+                    theta.astype(np.float32), nond.astype(np.float32),
+                    y.astype(np.float32), masks)
+    cfg = ModelConfig(kind=kind, theta_dim=theta.shape[1],
+                      gtn=GTNConfig())
+    return ds, cfg
+
+
+def _huber(res: jnp.ndarray, delta: float = 1.0) -> jnp.ndarray:
+    a = jnp.abs(res)
+    return jnp.where(a <= delta, 0.5 * a * a, delta * (a - 0.5 * delta))
+
+
+def train_model(ds: RowDataset, cfg: ModelConfig, *, steps: int = 1500,
+                batch: int = 512, lr: float = 2e-3, seed: int = 0,
+                verbose: bool = False) -> PerfModel:
+    # Target normalization from the train split (z = (log(y+eps) - mu) / sd).
+    tr_rows = ds.masks["train"]
+    y_tr = ds.y[tr_rows] if tr_rows.any() else ds.y
+    logy = np.log(np.maximum(y_tr, 0.0) + TARGET_EPS)
+    stats = np.stack([logy.mean(0), np.maximum(logy.std(0), 1e-3)])
+    model = PerfModel(cfg, seed=seed, target_stats=stats)
+    params = model.params
+    opt = adamw_init(params)
+    apply_rows = model.apply_rows
+    mu = jnp.asarray(stats[0]),
+    z_mu = jnp.asarray(stats[0])
+    z_sd = jnp.asarray(stats[1])
+
+    def loss_fn(p, graphs, theta, nond, y):
+        pred = apply_rows(p, graphs, theta, nond)
+        z = (jnp.log(jnp.maximum(y, 0.0) + TARGET_EPS) - z_mu) / z_sd
+        return _huber(pred - z).mean()
+
+    @jax.jit
+    def step_fn(p, opt, graphs, theta, nond, y, lr_now):
+        loss, g = jax.value_and_grad(loss_fn)(p, graphs, theta, nond, y)
+        p, opt = adamw_update(p, g, opt, lr_now)
+        return p, opt, loss
+
+    rng = np.random.default_rng(seed)
+    tr = ds.masks["train"]
+    idx_all = np.nonzero(tr)[0]
+    if idx_all.size == 0:
+        idx_all = np.arange(ds.n)
+    batch = min(batch, idx_all.size)
+    GX, GP, GB, GM = ds.graphs
+    losses = []
+    for t in range(steps):
+        idx = rng.choice(idx_all, size=batch, replace=idx_all.size < batch * 2)
+        gi = ds.graph_id[idx]
+        graphs = (GX[gi], GP[gi], GB[gi], GM[gi])
+        warm = min(1.0, (t + 1) / 100.0)
+        decay = 0.5 * (1 + np.cos(np.pi * t / steps))
+        lr_now = np.float32(lr * warm * (0.1 + 0.9 * decay))
+        params, opt, loss = step_fn(params, opt, graphs, ds.theta[idx],
+                                    ds.nond[idx], ds.y[idx], lr_now)
+        losses.append(float(loss))
+        if verbose and (t + 1) % 200 == 0:
+            print(f"  step {t+1}/{steps} loss {np.mean(losses[-100:]):.4f}")
+    return PerfModel(cfg, params=params, target_stats=stats)
+
+
+@dataclasses.dataclass
+class Metrics:
+    wmape: np.ndarray     # per-target
+    p50: np.ndarray
+    p90: np.ndarray
+    corr: np.ndarray
+    xput: float           # regressor rows/s
+
+    def row(self, i: int) -> str:
+        return (f"WMAPE={self.wmape[i]:.3f} P50={self.p50[i]:.3f} "
+                f"P90={self.p90[i]:.3f} Corr={self.corr[i]:.3f}")
+
+
+def evaluate(model: PerfModel, ds: RowDataset, split: str = "test",
+             max_rows: int = 20000) -> Metrics:
+    m = ds.masks[split]
+    idx = np.nonzero(m)[0]
+    if idx.size > max_rows:
+        idx = idx[:max_rows]
+    GX, GP, GB, GM = ds.graphs
+    preds = []
+    for lo in range(0, idx.size, 2048):
+        ii = idx[lo:lo + 2048]
+        gi = ds.graph_id[ii]
+        z = model.apply_rows(model.params, (GX[gi], GP[gi], GB[gi], GM[gi]),
+                             ds.theta[ii], ds.nond[ii])
+        preds.append(model.from_z(np.asarray(z)))
+    pred = np.concatenate(preds, 0)
+    truth = ds.y[idx]
+    eps = 1e-6
+    ae = np.abs(pred - truth)
+    rel = ae / np.maximum(np.abs(truth), eps)
+    wmape = ae.sum(0) / np.maximum(np.abs(truth).sum(0), eps)
+    p50 = np.percentile(rel, 50, axis=0)
+    p90 = np.percentile(rel, 90, axis=0)
+    corr = np.array([np.corrcoef(pred[:, j], truth[:, j])[0, 1]
+                     for j in range(truth.shape[1])])
+    # Throughput of the solver-facing path (cached embedding + regressor).
+    emb = np.zeros(model.cfg.gtn.d_model, np.float32)
+    theta = np.random.default_rng(0).random(
+        (8192, model.cfg.theta_dim)).astype(np.float32)
+    nond = np.zeros(12, np.float32)
+    model.predict(emb, theta, nond)  # compile
+    t0 = time.perf_counter()
+    for _ in range(5):
+        model.predict(emb, theta, nond)
+    xput = 5 * 8192 / (time.perf_counter() - t0)
+    return Metrics(wmape, p50, p90, corr, xput)
+
+
+def train_all_models(traces: TraceSet, *, steps: int = 1500,
+                     lqp_steps: Optional[int] = None, seed: int = 0,
+                     verbose: bool = False
+                     ) -> Dict[str, Tuple[PerfModel, RowDataset, Metrics]]:
+    """Train subQ / QS / L̄QP models from one trace set (paper Table 3)."""
+    out = {}
+    for kind in ("subq", "qs", "lqp"):
+        ds, cfg = build_dataset(traces, kind, seed=seed)
+        n_steps = steps if kind != "lqp" else (lqp_steps or max(300, steps // 3))
+        bs = 512 if kind != "lqp" else 64
+        model = train_model(ds, cfg, steps=n_steps, batch=bs, seed=seed,
+                            verbose=verbose)
+        met = evaluate(model, ds)
+        if verbose:
+            print(f"[{kind}] latency {met.row(0)} | io {met.row(1)} | "
+                  f"xput {met.xput/1e3:.0f}K/s")
+        out[kind] = (model, ds, met)
+    return out

@@ -1,0 +1,394 @@
+"""Hierarchical MOO with Constraints (paper §5.1, Algorithms 1–4).
+
+Solves the compile-time fine-grained tuning problem
+
+    argmin_{θc, {θp_i}, {θs_i}}  [ Σ_i φ_1(subQ_i, θc, θp_i, θs_i),
+                                   Σ_i φ_2(subQ_i, θc, θp_i, θs_i) ]
+
+by (1) *subQ tuning* — Algorithm 1's effective-set generation with θc
+clustering, per-representative θp MOO over a shared sample pool, optimal-θp
+assignment to cluster members, and crossover-based θc enrichment — and
+(2) *DAG aggregation* — HMOOC1 (exact divide-and-conquer Minkowski merge),
+HMOOC2 (weighted-sum over functions), HMOOC3 (boundary/extreme-point
+approximation), exploiting that analytical latency and cost are sums over
+subQs so the DAG reduces to a list.
+
+The stage evaluator abstracts the objective model:
+
+    stage_eval(i, Tc, Tps) -> (n, k) objective rows for subQ i,
+        Tc: (n, d_c) unit-space θc, Tps: (n, d_p + d_s) unit-space θp⊕θs.
+
+In production it wraps the trained subQ PerfModel; tests can plug the
+analytic simulator or synthetic functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .clustering import kmeans_fit
+from .pareto import pareto_mask_np
+
+__all__ = ["HMOOCConfig", "HMOOCResult", "hmooc_solve",
+           "dag_aggregate", "minkowski_merge_2d"]
+
+StageEval = Callable[[int, np.ndarray, np.ndarray], np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class HMOOCConfig:
+    n_c_init: int = 64          # initial θc candidates (LHS)
+    n_clusters: int = 10        # θc clusters (Alg. 1 line 2)
+    n_p_pool: int = 256         # shared θp⊕θs sample pool size
+    n_c_enrich: int = 64        # crossover-generated θc candidates
+    max_bank: int = 48          # per-(θc, subQ) Pareto bank cap
+    dag_method: str = "hmooc3"  # "hmooc1" | "hmooc2" | "hmooc3"
+    n_ws_weights: int = 11      # weight vectors for hmooc2
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class HMOOCResult:
+    front: np.ndarray           # (q, k) query-level Pareto objective values
+    theta_c: np.ndarray         # (q, d_c) unit
+    theta_ps: np.ndarray        # (q, m, d_ps) unit per-subQ θp⊕θs
+    solve_time: float
+    n_evals: int
+    extras: Dict[str, float]
+
+
+# ---------------------------------------------------------------------------
+# Subquery tuning (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def _snap_unique(U: np.ndarray, snap) -> np.ndarray:
+    Us = snap(U) if snap is not None else U
+    return np.unique(np.round(Us, 9), axis=0)
+
+
+def _crossover(Uc: np.ndarray, n_new: int, d: int,
+               rng: np.random.Generator) -> np.ndarray:
+    """θc crossover (App. C.1): random cut + Cartesian-product recombination."""
+    if Uc.shape[0] < 2:
+        return np.zeros((0, d))
+    out = []
+    for _ in range(4):  # a few cut positions
+        cut = int(rng.integers(1, d))
+        pre = np.unique(Uc[:, :cut], axis=0)
+        suf = np.unique(Uc[:, cut:], axis=0)
+        ii = rng.integers(0, pre.shape[0], size=n_new)
+        jj = rng.integers(0, suf.shape[0], size=n_new)
+        out.append(np.concatenate([pre[ii], suf[jj]], axis=1))
+    cand = np.unique(np.concatenate(out, 0), axis=0)
+    rng.shuffle(cand)
+    return cand[:n_new]
+
+
+def _pareto_bank(F: np.ndarray, cap: int) -> np.ndarray:
+    """Indices of the non-dominated rows of F (capped, best-first)."""
+    mask = pareto_mask_np(F)
+    idx = np.nonzero(mask)[0]
+    if idx.size > cap:
+        # Keep a spread: sort by first objective, take evenly spaced.
+        order = idx[np.argsort(F[idx, 0])]
+        keep = np.linspace(0, order.size - 1, cap).round().astype(int)
+        idx = order[keep]
+    return idx
+
+
+def subq_tuning(
+    stage_eval: StageEval,
+    m: int,
+    d_c: int,
+    d_ps: int,
+    cfg: HMOOCConfig,
+    *,
+    snap_c=None,
+    snap_ps=None,
+    rng: Optional[np.random.Generator] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+    """Effective-set generation (Algorithm 1).
+
+    Returns (Uc, pool, F_bank, idx_bank, n_evals) where
+      Uc: (N, d_c) θc candidates,
+      pool: (P, d_ps) shared θp⊕θs samples,
+      F_bank: (N, m, B, k) objective values (+inf padded),
+      idx_bank: (N, m, B) pool indices (−1 padded).
+    """
+    rng = rng or np.random.default_rng(cfg.seed)
+    # Line 1: init_c (LHS over the unit cube, snapped to valid raw values).
+    Uc0 = _lhs(rng, cfg.n_c_init, d_c)
+    Uc0 = _snap_unique(Uc0, snap_c)
+    # Line 2: cluster.
+    km, labels0 = kmeans_fit(Uc0, cfg.n_clusters, rng)
+    reps = km.centers
+    if snap_c is not None:
+        reps = snap_c(reps)
+    # Shared θp⊕θs pool.
+    pool = _lhs(rng, cfg.n_p_pool, d_ps)
+    if snap_ps is not None:
+        pool = snap_ps(pool)
+
+    n_evals = 0
+    C = reps.shape[0]
+    # Line 3: optimize_p_moo for each representative × subQ.
+    opt_idx: List[List[np.ndarray]] = []
+    k_obj = None
+    for r in range(C):
+        Tc = np.tile(reps[r], (pool.shape[0], 1))
+        per_subq = []
+        for i in range(m):
+            F = stage_eval(i, Tc, pool)
+            n_evals += F.shape[0]
+            k_obj = F.shape[1]
+            per_subq.append(_pareto_bank(F, cfg.max_bank))
+        opt_idx.append(per_subq)
+
+    def assign(Uc: np.ndarray, labels: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Line 4/7: evaluate members against their rep's optimal θp sets."""
+        nonlocal n_evals
+        N = Uc.shape[0]
+        B = cfg.max_bank
+        F_bank = np.full((N, m, B, k_obj), np.inf)
+        idx_bank = np.full((N, m, B), -1, int)
+        for r in range(C):
+            members = np.nonzero(labels == r)[0]
+            if members.size == 0:
+                continue
+            for i in range(m):
+                sel = opt_idx[r][i]
+                if sel.size == 0:
+                    continue
+                nb = min(sel.size, B)
+                sel = sel[:nb]
+                Tc = np.repeat(Uc[members], nb, axis=0)
+                Tp = np.tile(pool[sel], (members.size, 1))
+                F = stage_eval(i, Tc, Tp).reshape(members.size, nb, k_obj)
+                n_evals += members.size * nb
+                F_bank[members, i, :nb] = F
+                idx_bank[members, i, :nb] = sel
+        return F_bank, idx_bank
+
+    F0, I0 = assign(Uc0, labels0)
+
+    # Line 5-7: enrich via crossover, assign to existing clusters.
+    Uc1 = _crossover(Uc0, cfg.n_c_enrich, d_c, rng)
+    if snap_c is not None and Uc1.size:
+        Uc1 = _snap_unique(Uc1, snap_c)
+    if Uc1.size:
+        # Drop duplicates of the initial set.
+        mask = ~(Uc1[:, None, :] == Uc0[None, :, :]).all(-1).any(1)
+        Uc1 = Uc1[mask]
+    if Uc1.size:
+        labels1 = km.assign(Uc1)
+        F1, I1 = assign(Uc1, labels1)
+        Uc = np.concatenate([Uc0, Uc1], 0)
+        F_bank = np.concatenate([F0, F1], 0)
+        idx_bank = np.concatenate([I0, I1], 0)
+    else:
+        Uc, F_bank, idx_bank = Uc0, F0, I0
+    return Uc, pool, F_bank, idx_bank, n_evals
+
+
+def _lhs(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
+    u = (rng.permuted(np.tile(np.arange(n), (d, 1)), axis=1).T
+         + rng.random((n, d))) / n
+    return u
+
+
+# ---------------------------------------------------------------------------
+# DAG aggregation (paper §5.1.2, Appendix B)
+# ---------------------------------------------------------------------------
+
+def minkowski_merge_2d(F1: np.ndarray, S1: np.ndarray,
+                       F2: np.ndarray, S2: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pf(Pf(F)⊕Pf(G)) — enumerate sums, keep non-dominated (Alg. 3).
+
+    S1/S2 are (n, m) per-subQ pool-index selections (−1 = unset); merged
+    entries take whichever side set each subQ.
+    """
+    n1, n2 = F1.shape[0], F2.shape[0]
+    F = (F1[:, None, :] + F2[None, :, :]).reshape(n1 * n2, -1)
+    mask = pareto_mask_np(F)
+    keep = np.nonzero(mask)[0]
+    i1, i2 = keep // n2, keep % n2
+    sel = np.where(S1[i1] >= 0, S1[i1], S2[i2])
+    return F[keep], sel
+
+
+def _hmooc1_fixed_c(Fb: np.ndarray, Ib: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact divide-and-conquer aggregation under one θc (Alg. 2).
+
+    Returns (front (q, k), sel (q, m)) with ``sel[:, i]`` the pool index
+    chosen for subQ i.
+    """
+    m = Fb.shape[0]
+    nodes = []
+    for i in range(m):
+        valid = np.isfinite(Fb[i]).all(-1)
+        # Only local Pareto points can contribute (Prop. 5.1).
+        valid &= pareto_mask_np(Fb[i], valid)
+        idx = np.nonzero(valid)[0]
+        if idx.size == 0:
+            return np.zeros((0, Fb.shape[-1])), np.zeros((0, m), int)
+        F = Fb[i][idx]
+        sel = np.full((idx.size, m), -1, int)
+        sel[:, i] = Ib[i][idx]
+        nodes.append((F, sel))
+    while len(nodes) > 1:
+        nxt = []
+        for a in range(0, len(nodes) - 1, 2):
+            F, S = minkowski_merge_2d(nodes[a][0], nodes[a][1],
+                                      nodes[a + 1][0], nodes[a + 1][1])
+            nxt.append((F, S))
+        if len(nodes) % 2:
+            nxt.append(nodes[-1])
+        nodes = nxt
+    return nodes[0]
+
+
+def _hmooc2_fixed_c(Fb: np.ndarray, Ib: np.ndarray, n_weights: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """WS-over-functions aggregation under one θc (Alg. 4)."""
+    m, B, k = Fb.shape
+    assert k == 2
+    ws = np.linspace(0.0, 1.0, n_weights)
+    # Normalize per OBJECTIVE over the whole bank (one affine transform
+    # shared by every subQ).  The paper's Alg. 4 normalizes per subQ, but
+    # per-subQ scales give each subQ different effective weights and void
+    # Lemma 1's guarantee that each WS pick is query-level Pareto optimal
+    # (hypothesis-tested in tests/test_hmooc.py); a shared affine transform
+    # commutes with the sum aggregator and preserves the proof.
+    finite = np.where(np.isfinite(Fb), Fb, np.nan)
+    lo = np.nanmin(finite, axis=(0, 1), keepdims=True)
+    hi = np.nanmax(finite, axis=(0, 1), keepdims=True)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    Fn = (Fb - lo) / span
+    Fn = np.where(np.isfinite(Fb), Fn, 1e18)
+    points, sels = [], []
+    for w in ws:
+        score = w * Fn[..., 0] + (1 - w) * Fn[..., 1]     # (m, B)
+        j = np.argmin(score, axis=1)                      # per-subQ argmin
+        F = Fb[np.arange(m), j]
+        if not np.isfinite(F).all():
+            continue
+        points.append(F.sum(0))
+        sels.append(Ib[np.arange(m), j])
+    if not points:
+        return np.zeros((0, k)), np.zeros((0, m), int)
+    P = np.stack(points)
+    mask = pareto_mask_np(P)
+    keep = np.nonzero(mask)[0]
+    return P[keep], np.stack(sels)[keep]
+
+
+def _hmooc3_extremes(F_bank: np.ndarray, idx_bank: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Extreme points per θc (Prop. 5.2/5.3), fully vectorized.
+
+    Returns (E, J): E (N, k, k) extreme objective vectors, J (N, k, m)
+    per-subQ bank choices; E[c, v] is the query-level point minimizing
+    objective v under θc candidate c.
+    """
+    N, m, B, k = F_bank.shape
+    E = np.full((N, k, k), np.inf)
+    J = np.full((N, k, m), -1, int)
+    for v in range(k):
+        j = np.argmin(np.where(np.isfinite(F_bank[..., v]),
+                               F_bank[..., v], np.inf), axis=2)  # (N, m)
+        gather = np.take_along_axis(
+            F_bank, j[:, :, None, None].repeat(k, -1), axis=2)[:, :, 0, :]
+        E[:, v, :] = gather.sum(1)
+        J[:, v, :] = j
+    return E, J
+
+
+def dag_aggregate(
+    Uc: np.ndarray,
+    pool: np.ndarray,
+    F_bank: np.ndarray,
+    idx_bank: np.ndarray,
+    method: str,
+    *,
+    n_ws_weights: int = 11,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Recover query-level Pareto solutions from per-subQ banks.
+
+    Returns (front (q, k), theta_c (q, d_c), theta_ps (q, m, d_ps)).
+    """
+    N, m, B, k = F_bank.shape
+    d_ps = pool.shape[1]
+
+    if method == "hmooc3":
+        E, J = _hmooc3_extremes(F_bank, idx_bank)
+        pts = E.reshape(N * k, k)
+        finite = np.isfinite(pts).all(-1)
+        mask = pareto_mask_np(pts) & finite
+        keep = np.nonzero(mask)[0]
+        front = pts[keep]
+        theta_c = Uc[keep // k]
+        theta_ps = np.zeros((keep.size, m, d_ps))
+        for o, K in enumerate(keep):
+            c, v = K // k, K % k
+            sel = np.take_along_axis(idx_bank[c], J[c, v][:, None],
+                                     axis=1)[:, 0]
+            theta_ps[o] = pool[np.maximum(sel, 0)]
+        return front, theta_c, theta_ps
+
+    fronts, tcs, sels = [], [], []
+    for c in range(N):
+        if method == "hmooc1":
+            F, S = _hmooc1_fixed_c(F_bank[c], idx_bank[c])
+        elif method == "hmooc2":
+            F, S = _hmooc2_fixed_c(F_bank[c], idx_bank[c], n_ws_weights)
+        else:
+            raise ValueError(method)
+        if F.shape[0]:
+            fronts.append(F)
+            tcs.append(np.tile(Uc[c], (F.shape[0], 1)))
+            sels.append(S)
+    if not fronts:
+        z = np.zeros((0, k))
+        return z, np.zeros((0, Uc.shape[1])), np.zeros((0, m, d_ps))
+    F = np.concatenate(fronts, 0)
+    TC = np.concatenate(tcs, 0)
+    SEL = np.concatenate(sels, 0)
+    mask = pareto_mask_np(F)
+    keep = np.nonzero(mask)[0]
+    theta_ps = pool[np.maximum(SEL[keep], 0)]   # (q, m, d_ps)
+    return F[keep], TC[keep], theta_ps
+
+
+# ---------------------------------------------------------------------------
+# Full solve
+# ---------------------------------------------------------------------------
+
+def hmooc_solve(
+    stage_eval: StageEval,
+    m: int,
+    d_c: int,
+    d_ps: int,
+    cfg: HMOOCConfig = HMOOCConfig(),
+    *,
+    snap_c=None,
+    snap_ps=None,
+) -> HMOOCResult:
+    """Compile-time fine-grained MOO (subQ tuning + DAG aggregation)."""
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(cfg.seed)
+    Uc, pool, F_bank, idx_bank, n_evals = subq_tuning(
+        stage_eval, m, d_c, d_ps, cfg, snap_c=snap_c, snap_ps=snap_ps,
+        rng=rng)
+    front, theta_c, theta_ps = dag_aggregate(
+        Uc, pool, F_bank, idx_bank, cfg.dag_method,
+        n_ws_weights=cfg.n_ws_weights)
+    dt = time.perf_counter() - t0
+    return HMOOCResult(front=front, theta_c=theta_c, theta_ps=theta_ps,
+                       solve_time=dt, n_evals=n_evals,
+                       extras={"n_theta_c": float(Uc.shape[0])})

@@ -1,0 +1,76 @@
+"""Compile-time optimization: HMOOC solve + WUN recommendation (paper §5.1).
+
+Produces the optimal Spark context θc*, the fine-grained per-subQ θp/θs the
+runtime optimizer is seeded with, and the aggregated submission copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ...queryengine.plan import Query
+from ...queryengine.simulator import CostModel, DEFAULT_COST
+from ..models.perf_model import PerfModel
+from ..moo.hmooc import HMOOCConfig, HMOOCResult, hmooc_solve
+from ..moo.wun import wun_select
+from .aggregation import aggregate_submission_theta
+from .objectives import StageObjectives
+
+__all__ = ["CompileTimeResult", "compile_time_optimize"]
+
+
+@dataclasses.dataclass
+class CompileTimeResult:
+    # Pareto front (model/believed objective space) + chosen point.
+    front: np.ndarray             # (q, 2)
+    choice: int                   # WUN index into the front
+    # Raw-space configuration of the chosen point.
+    theta_c: np.ndarray           # (8,)
+    theta_p_sub: np.ndarray       # (m, 9) fine-grained
+    theta_s_sub: np.ndarray       # (m, 2)
+    theta_p0: np.ndarray          # (9,) aggregated submission copy
+    theta_s0: np.ndarray          # (2,)
+    solve_time: float
+    n_evals: int
+
+    @property
+    def chosen_objectives(self) -> np.ndarray:
+        return self.front[self.choice]
+
+
+def compile_time_optimize(
+    query: Query,
+    *,
+    model: Optional[PerfModel] = None,
+    weights: Tuple[float, float] = (0.9, 0.1),
+    cfg: HMOOCConfig = HMOOCConfig(),
+    cost: CostModel = DEFAULT_COST,
+) -> CompileTimeResult:
+    """Solve the fine-grained compile-time MOO and pick a WUN recommendation.
+
+    ``model=None`` uses the oracle (simulator-on-estimates) objective — used
+    by algorithm studies; pass the trained subQ model for the paper pipeline.
+    """
+    t0 = time.perf_counter()
+    obj = StageObjectives(query, model=model, cost=cost)
+    res: HMOOCResult = hmooc_solve(
+        obj.stage_eval, obj.m, obj.d_c, obj.d_ps, cfg,
+        snap_c=obj.snap_c, snap_ps=obj.snap_ps)
+    if res.front.shape[0] == 0:
+        raise RuntimeError(f"HMOOC produced no solutions for {query.qid}")
+    choice, _ = wun_select(res.front, np.asarray(weights))
+
+    tc_u = res.theta_c[choice]
+    tps_u = res.theta_ps[choice]              # (m, d_ps)
+    tc_raw, tp_raw, ts_raw = obj.split_raw(
+        tc_u[None, :], tps_u)
+    theta_p0, theta_s0 = aggregate_submission_theta(query, tp_raw, ts_raw)
+    dt = time.perf_counter() - t0
+    return CompileTimeResult(
+        front=res.front, choice=choice, theta_c=tc_raw[0],
+        theta_p_sub=tp_raw, theta_s_sub=ts_raw,
+        theta_p0=theta_p0, theta_s0=theta_s0,
+        solve_time=dt, n_evals=res.n_evals)

@@ -1,0 +1,116 @@
+"""Runtime optimization: the AQE plugin that re-tunes θp / θs (paper §5.2).
+
+Invoked by :func:`repro.queryengine.aqe.run_with_aqe` each time a collapsed
+plan (L̄QP) or a new query stage (QS) needs optimization.  The optimizer sees
+*true* statistics (AQE has revealed the completed stages' cardinalities) and
+re-solves a small MOO for the stage at hand, picking the weighted-best
+candidate under the user preference — mirroring the paper's client/server
+design where the server runs model inference + MOO per request.
+
+Backends:
+  * oracle — simulate the stage on true inputs (used for algorithm studies);
+  * model  — the trained runtime QS model (θp dropped; θc ⊕ θs decision) and
+    the subQ model re-evaluated with true statistics for θp choices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+from ...queryengine.plan import Query, SubQ
+from ...queryengine.simulator import CostModel, DEFAULT_COST, simulate_subq
+from ...queryengine.trace import _alpha_stats
+from ..models.perf_model import PerfModel, make_nondecision
+from .objectives import resource_rate
+from .spark_space import theta_p_space, theta_s_space
+
+__all__ = ["make_runtime_optimizers"]
+
+
+def _weighted_pick(F: np.ndarray, weights: Tuple[float, float]) -> int:
+    lo, hi = F.min(0), F.max(0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    Fn = (F - lo) / span
+    w = np.asarray(weights, np.float64)
+    return int(np.argmin((Fn * w).sum(-1)))
+
+
+def make_runtime_optimizers(
+    query: Query,
+    theta_c_raw: np.ndarray,
+    *,
+    seed_theta_p: Optional[np.ndarray] = None,   # (m, 9) compile-time seeds
+    seed_theta_s: Optional[np.ndarray] = None,   # (m, 2)
+    model_subq: Optional[PerfModel] = None,
+    model_qs: Optional[PerfModel] = None,
+    weights: Tuple[float, float] = (0.9, 0.1),
+    n_candidates: int = 64,
+    cost: CostModel = DEFAULT_COST,
+    seed: int = 0,
+):
+    """Build (lqp_optimizer, qs_optimizer) callbacks for ``run_with_aqe``."""
+    ps, ss = theta_p_space(), theta_s_space()
+    rng = np.random.default_rng(seed)
+    tc_row = np.asarray(theta_c_raw, np.float64).reshape(1, -1)
+    rate = resource_rate(tc_row, cost)[0]
+
+    # Candidate pools are fixed per query (one LHS draw), plus per-stage
+    # compile-time seeds — the runtime MOO just rescores them on true stats.
+    pool_p_unit = ps.sample_lhs(rng, n_candidates)
+    pool_p = ps.to_raw(pool_p_unit)
+    pool_s_unit = ss.sample_lhs(rng, n_candidates)
+    pool_s = ss.to_raw(pool_s_unit)
+
+    def _stage_objectives_raw(sq: SubQ, tp: np.ndarray, ts: np.ndarray
+                              ) -> np.ndarray:
+        """True-statistics stage objectives for n candidate rows."""
+        n = max(tp.shape[0], ts.shape[0])
+        tc = np.broadcast_to(tc_row, (n, 8))
+        if model_qs is not None and model_subq is not None:
+            # Model path: subQ model re-scored with true stats drives θp;
+            # (QS model is used for θs where θp is already fixed.)
+            alpha = _alpha_stats(sq.input_rows, sq.input_bytes)
+            nond = make_nondecision(alpha)
+            from .spark_space import theta_c_space
+            cs = theta_c_space()
+            theta = np.concatenate([
+                np.broadcast_to(cs.to_unit(tc_row)[0], (n, 8)),
+                ps.to_unit(np.broadcast_to(tp, (n, 9))),
+                ss.to_unit(np.broadcast_to(ts, (n, 2)))], -1)
+            emb = model_subq.embed(query, sq.sq_id)
+            pred = model_subq.predict(emb, theta.astype(np.float32), nond)
+            lat, io = pred[:, 0], pred[:, 1]
+        else:
+            sim = simulate_subq(sq, tc, np.broadcast_to(tp, (n, 9)),
+                                np.broadcast_to(ts, (n, 2)), cost=cost,
+                                aqe=True, use_est_inputs=False)
+            lat, io = sim.ana_latency, sim.io_gb
+        return np.stack([lat * 1.0, lat * rate + io * cost.price_io_gb], -1)
+
+    def lqp_optimizer(*, query: Query, subq: SubQ, theta_c: np.ndarray,
+                      theta_p: np.ndarray) -> Optional[np.ndarray]:
+        """Re-tune θp for the collapsed plan exposing ``subq`` (a join)."""
+        cands = [pool_p, theta_p[None, :]]
+        if seed_theta_p is not None:
+            cands.append(seed_theta_p[subq.sq_id][None, :])
+        tp = np.concatenate(cands, 0)
+        ts = (seed_theta_s[subq.sq_id] if seed_theta_s is not None
+              else ss.default_raw())[None, :]
+        F = _stage_objectives_raw(subq, tp, ts)
+        return tp[_weighted_pick(F, weights)]
+
+    def qs_optimizer(*, query: Query, subq: SubQ, theta_c: np.ndarray,
+                     theta_s: np.ndarray) -> Optional[np.ndarray]:
+        """Re-tune θs for a newly created query stage."""
+        cands = [pool_s, theta_s[None, :]]
+        if seed_theta_s is not None:
+            cands.append(seed_theta_s[subq.sq_id][None, :])
+        ts = np.concatenate(cands, 0)
+        tp = (seed_theta_p[subq.sq_id] if seed_theta_p is not None
+              else theta_p_space().default_raw())[None, :]
+        F = _stage_objectives_raw(subq, tp, ts)
+        return ts[_weighted_pick(F, weights)]
+
+    return lqp_optimizer, qs_optimizer

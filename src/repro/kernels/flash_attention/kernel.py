@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: flash attention with GQA and causal masking.
+
+Online-softmax tiling (Dao et al.) adapted to the TPU memory hierarchy:
+
+* Q tiles of (BQ, D) stay VMEM-resident for a full sweep over KV tiles of
+  (BK, D); the running max/denominator and the (BQ, D) f32 accumulator live
+  in VMEM scratch, so HBM traffic is one read of Q/K/V and one write of O.
+* BQ = BK = 128 and D padded to a 128 multiple keep the two matmuls per
+  step (Q·Kᵀ and P·V) MXU-shaped.
+* GQA is resolved in the BlockSpec index map — query-head b reads KV head
+  b→(b // group) without materializing repeated KV (saves Hq/Hkv × KV HBM
+  traffic, the reason GQA exists).
+* Causal masking skips KV tiles strictly above the diagonal via
+  ``pl.when`` so the wasted-FLOP fraction is ≤ BK/Skv.
+
+Inputs are pre-collapsed to (BH, S, D) by ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas", "BQ", "BK"]
+
+BQ = 128
+BK = 128
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, causal: bool, nk: int, sq: int, skv: int,
+            skv_real: int):
+    i = pl.program_id(1)       # q block
+    j = pl.program_id(2)       # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    offset = skv - sq          # causal alignment: query t sees keys ≤ t+offset
+    run = True
+    if causal:
+        # KV block j is fully masked iff its first key > last query + offset.
+        run = (j * BK) <= (i * BQ + BQ - 1) + offset
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)            # (BK, D)
+        v = v_ref[0].astype(jnp.float32)            # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (BQ, BK)
+        kj = j * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        if skv_real < nk * BK:
+            s = jnp.where(kj < skv_real, s, NEG)           # mask padded keys
+        if causal:
+            qi = i * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+            s = jnp.where(kj <= qi + offset, s, NEG)
+        m_prev = m_ref[...]                          # (BQ, 1)
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_cur)                       # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_cur)              # (BQ, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "group", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, group: int = 1,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (BHq, Sq, D); k, v: (BHkv, Skv, D); query head b uses kv head
+    b // group.  Returns (BHq, Sq, D)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    # Pad sequence axes to block multiples; padded keys are masked by the
+    # softmax running max only if they can win — guard with explicit -inf
+    # via causal offset for queries, and pad K rows with zeros + rely on
+    # the padded-query rows being discarded on slice-out.
+    sq_pad = (-Sq) % BQ
+    sk_pad = (-Skv) % BK
+    qp = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0)))
+    SqP, SkP = Sq + sq_pad, Skv + sk_pad
+    nq, nk = SqP // BQ, SkP // BK
+
+    # Causal alignment uses REAL lengths (query t sees keys ≤ t + offset);
+    # padded key columns are masked inside the kernel via skv_real.
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               nk=nk, sq=Sq, skv=Skv, skv_real=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, BQ, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, D), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, BK, D), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, SqP, D), q.dtype),
+        scratch_shapes=[
+            # f32 VMEM scratch: accumulator + running max + denominator
+            pltpu.VMEM((BQ, D), jnp.float32),
+            pltpu.VMEM((BQ, 1), jnp.float32),
+            pltpu.VMEM((BQ, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq, :]

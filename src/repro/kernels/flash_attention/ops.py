@@ -1,0 +1,35 @@
+"""Public flash-attention wrapper: (B, H, S, D) API with GQA."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Flash attention with grouped-query heads.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D), Hq % Hkv == 0.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if interpret is None:
+        interpret = not _ON_TPU
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, k.shape[2], D)
+    vf = v.reshape(B * Hkv, v.shape[2], D)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, group=group,
+                                 interpret=interpret)
+    return out.reshape(B, Hq, Sq, D)

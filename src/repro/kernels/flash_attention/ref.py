@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (GQA + causal)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True) -> jnp.ndarray:
+    """Reference attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    Returns (B, Hq, Sq, D) in q.dtype; accumulation in f32.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / jnp.sqrt(D)
+    if causal:
+        Skv = k.shape[2]
+        # Align the ends: query i attends keys <= i + (Skv - Sq).
+        qi = jnp.arange(Sq)[:, None]
+        kj = jnp.arange(Skv)[None, :]
+        mask = kj <= qi + (Skv - Sq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jnp.exp(logits - logits.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Jitted public wrapper for the Pareto-filter kernel.
+
+On CPU hosts the Pallas kernel executes in interpret mode (same semantics,
+Python evaluation); on TPU set ``interpret=False`` for the compiled path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import pareto_filter_pallas
+from .ref import pareto_mask_ref
+
+__all__ = ["pareto_filter", "pareto_mask_ref"]
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def pareto_filter(F: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
+                  *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Boolean non-dominated mask of (n, k) minimization objectives."""
+    F = jnp.asarray(F)
+    if valid is None:
+        valid = jnp.isfinite(F).all(-1)
+    if interpret is None:
+        interpret = not _ON_TPU
+    return pareto_filter_pallas(F, valid, interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Pareto dominance-filter kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pareto_mask_ref"]
+
+
+def pareto_mask_ref(F: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Non-dominated mask over (n, k) minimization objectives.
+
+    A row i is kept iff it is valid and no valid row j dominates it
+    (F[j] <= F[i] element-wise with at least one strict <).
+    """
+    F = F.astype(jnp.float32)
+    le = (F[:, None, :] <= F[None, :, :]).all(-1)     # (j, i): j <= i
+    lt = (F[:, None, :] < F[None, :, :]).any(-1)
+    dom = ((le & lt) & valid[:, None]).any(0)
+    return valid & ~dom

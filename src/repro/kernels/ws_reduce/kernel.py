@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: weighted-sum reduction over per-subQ solution banks.
+
+HMOOC2's hot loop: for every weight vector w and every subQ bank F_m, find
+argmin_j  w · F_m[j].  One grid step processes one subQ: the (NW, KPAD)
+weight tile and the (B, KPAD) bank tile are both VMEM-resident and the score
+matrix W @ F_mᵀ is a single MXU matmul — NW and B are padded to 128 so the
+matmul runs at full systolic utilization; the argmin is a VPU reduction over
+the lane axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ws_reduce_pallas", "KPAD"]
+
+KPAD = 8
+
+
+def _kernel(W_ref, F_ref, val_ref, idx_ref):
+    W = W_ref[...]                                  # (NW, KPAD)
+    F = F_ref[0]                                    # (B, KPAD)
+    scores = jax.lax.dot_general(
+        W, F, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (NW, B) MXU
+    idx_ref[0] = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+    val_ref[0] = jnp.min(scores, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ws_reduce_pallas(F: jnp.ndarray, W: jnp.ndarray,
+                     *, interpret: bool = True
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(m, B, k) banks × (nw, k) weights → (vals, idx) each (nw, m).
+
+    Banks are padded B→multiple of 128 with +1e30 sentinels (never argmin
+    unless the bank is empty) and k→KPAD with zeros (weights padded with
+    zeros, so extra columns never contribute).
+    """
+    m, B, k = F.shape
+    nw = W.shape[0]
+    Bp = max(128, ((B + 127) // 128) * 128)
+    NWp = max(128, ((nw + 127) // 128) * 128)
+    F32 = jnp.nan_to_num(F.astype(jnp.float32), posinf=1e30)
+    Fp = jnp.pad(F32, ((0, 0), (0, Bp - B), (0, KPAD - k)),
+                 constant_values=0.0)
+    if Bp > B:
+        Fp = Fp.at[:, B:, :k].set(1e30)
+    Wp = jnp.pad(W.astype(jnp.float32), ((0, NWp - nw), (0, KPAD - k)),
+                 constant_values=0.0)
+
+    vals, idx = pl.pallas_call(
+        _kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((NWp, KPAD), lambda i: (0, 0)),
+            pl.BlockSpec((1, Bp, KPAD), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, NWp), lambda i: (i, 0)),
+            pl.BlockSpec((1, NWp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, NWp), jnp.float32),
+            jax.ShapeDtypeStruct((m, NWp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Wp, Fp)
+
+    return vals[:, :nw].T, idx[:, :nw].T

@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the weighted-sum bank reduction."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ws_reduce_pallas
+from .ref import ws_reduce_ref
+
+__all__ = ["ws_reduce", "ws_reduce_ref"]
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def ws_reduce(F: jnp.ndarray, W: jnp.ndarray,
+              *, interpret: Optional[bool] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weighted argmin over (m, B, k) banks for (nw, k) weight rows."""
+    if interpret is None:
+        interpret = not _ON_TPU
+    return ws_reduce_pallas(jnp.asarray(F), jnp.asarray(W),
+                            interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the weighted-sum bank reduction."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ws_reduce_ref"]
+
+
+def ws_reduce_ref(F: jnp.ndarray, W: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(weight, subQ) weighted argmin over solution banks.
+
+    F: (m, B, k) objective banks (minimization; +inf = padded slot).
+    W: (nw, k) weight vectors.
+    Returns (vals (nw, m), idx (nw, m)): min weighted score and argmin index.
+    """
+    scores = jnp.einsum("wk,mbk->wmb", W.astype(jnp.float32),
+                        F.astype(jnp.float32))
+    idx = jnp.argmin(scores, axis=-1)
+    vals = jnp.min(scores, axis=-1)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips ("data", "model").
+Multi-pod:  2×16×16 = 512 chips ("pod", "data", "model") — the "pod" axis
+extends data parallelism across pods (gradient all-reduce crosses the pod
+boundary; everything else stays intra-pod).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1) if len(axes) == 2 else (n,)
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,75 @@
+"""Serving driver: batched prefill + decode on host devices (smoke scale).
+
+``python -m repro.launch.serve --arch glm4-9b --batch 4 --prompt-len 32
+--gen 16`` prefils a batch of synthetic prompts and decodes greedily.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..archs.registry import ARCH_IDS, build_model, get_smoke_config, \
+    get_config
+from ..launch.mesh import make_host_mesh
+from ..train.serve import make_serve_fns
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="glm4-9b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    api = build_model(cfg)
+    mesh = make_host_mesh()
+    max_len = args.prompt_len + args.gen + \
+        (cfg.n_patches if cfg.family == "vlm" else 0)
+    sf = make_serve_fns(api, mesh, batch=args.batch, max_len=max_len)
+
+    rng = np.random.default_rng(args.seed)
+    params = api.init(jax.random.PRNGKey(args.seed))
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
+    patches = None
+    if cfg.family == "vlm":
+        patches = jnp.asarray(rng.normal(
+            0, 1, (args.batch, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "audio":
+        patches = jnp.asarray(rng.normal(
+            0, 1, (args.batch, cfg.enc_seq, cfg.d_model)), jnp.float32)
+
+    cache = api.init_cache(args.batch, max_len)
+    t0 = time.time()
+    logits, cache = sf.prefill(params, tokens, cache, patches)
+    nxt = jnp.argmax(logits[:, -1], -1)
+    t_prefill = time.time() - t0
+    generated = [np.asarray(nxt)]
+    pos0 = args.prompt_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+    t0 = time.time()
+    for t in range(args.gen - 1):
+        pos = jnp.full((args.batch, 1), pos0 + t, jnp.int32)
+        logits, cache = sf.decode(params, nxt[:, None], cache, pos)
+        nxt = jnp.argmax(logits[:, -1], -1)
+        generated.append(np.asarray(nxt))
+    t_decode = time.time() - t0
+    gen = np.stack(generated, 1)
+    print(f"{args.arch}: prefill({args.batch}×{args.prompt_len}) "
+          f"{t_prefill*1e3:.0f} ms; {args.gen} decode steps "
+          f"{t_decode*1e3:.0f} ms "
+          f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s)")
+    print("sample:", gen[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

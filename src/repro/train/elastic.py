@@ -1,0 +1,66 @@
+"""Elastic scaling + straggler mitigation.
+
+* :func:`plan_elastic_mesh` — given the surviving device count, choose the
+  largest viable (data, model) grid (model axis preserved when possible so
+  tensor-sharded parameters keep their layout; data axis shrinks).
+* :func:`reshard_state` — move params/opt state onto the new mesh (device_put
+  with the new shardings; cross-host this is the checkpoint-restore path).
+* :func:`assign_data_shards` — deterministic data-shard ownership that
+  excludes stragglers and rebalances their shards round-robin, so every
+  host computes its assignment independently (no coordinator).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..archs.common import param_specs
+from .sharding import named
+
+__all__ = ["plan_elastic_mesh", "reshard_state", "assign_data_shards"]
+
+
+def plan_elastic_mesh(n_devices: int, *, prefer_model: int = 16,
+                      axes: Tuple[str, str] = ("data", "model")):
+    """Largest (data, model) grid using ≤ n_devices, preferring to keep the
+    model axis at ``prefer_model`` (params keep their TP layout)."""
+    model = prefer_model
+    while model > 1 and n_devices // model == 0:
+        model //= 2
+    data = max(n_devices // model, 1)
+    return (data, model), axes
+
+
+def reshard_state(state: Dict[str, Any], params_shape, new_mesh):
+    """device_put a (params-like) state tree onto a new mesh's shardings."""
+    spec = param_specs(params_shape, new_mesh)
+    sh = named(new_mesh, spec)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        state, sh)
+
+
+def assign_data_shards(n_shards: int, hosts: Sequence[int],
+                       stragglers: Sequence[int] = ()) -> Dict[int, List[int]]:
+    """Deterministic shard→host assignment excluding stragglers.
+
+    Healthy hosts keep their base shards; orphaned shards (from stragglers)
+    are redistributed round-robin by shard index — pure function of the
+    inputs, so every participant derives the same plan without coordination.
+    """
+    healthy = [h for h in hosts if h not in set(stragglers)]
+    if not healthy:
+        raise ValueError("no healthy hosts")
+    base = {h: [] for h in healthy}
+    orphans = []
+    for s in range(n_shards):
+        owner = hosts[s % len(hosts)]
+        if owner in base:
+            base[owner].append(s)
+        else:
+            orphans.append(s)
+    for i, s in enumerate(orphans):
+        base[healthy[i % len(healthy)]].append(s)
+    return base

@@ -1,0 +1,93 @@
+"""AdamW with a WSD (warmup–stable–decay) schedule, fully sharded states.
+
+Optimizer moments live on the same shardings as the parameters (ZeRO-3-style
+when params are FSDP-sharded over the 'data' axis).  ``moment_dtype``
+controls the moment precision — bf16 moments halve optimizer HBM, which is
+what lets the 398B Jamba config fit 256 × 16 GB chips (a distributed-
+optimization trick recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..archs.common import DTYPES
+
+Params = Dict[str, Any]
+
+__all__ = ["OptConfig", "wsd_schedule", "opt_init", "opt_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    # WSD schedule (minicpm's recipe): linear warmup → stable → 1-sqrt decay.
+    total_steps: int = 10000
+    warmup_steps: int = 100
+    decay_frac: float = 0.1
+
+
+def wsd_schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Warmup–Stable–Decay learning-rate schedule."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    decay_steps = cfg.decay_frac * cfg.total_steps
+    decay_start = cfg.total_steps - decay_steps
+    frac = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1), 0, 1)
+    decay = 1.0 - (1.0 - 0.1) * jnp.sqrt(frac)     # → 0.1·lr at the end
+    return cfg.lr * warm * decay
+
+
+def opt_init(params: Params, cfg: OptConfig) -> Params:
+    mdt = DTYPES[cfg.moment_dtype]
+    zeros = lambda x: jnp.zeros(x.shape, mdt)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def opt_update(params: Params, grads: Params, state: Params,
+               cfg: OptConfig) -> Tuple[Params, Params, Dict[str, Any]]:
+    """One AdamW step; returns (params, state, metrics)."""
+    step = state["step"] + 1
+    lr = wsd_schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    mdt = DTYPES[cfg.moment_dtype]
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g32
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g32 * g32
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        newp = p.astype(jnp.float32) - lr * (u + cfg.weight_decay
+                                             * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    # Unzip the 3-tuples.
+    newp = jax.tree_util.tree_map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    newm = jax.tree_util.tree_map(lambda t: t[1], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    newv = jax.tree_util.tree_map(lambda t: t[2], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return newp, {"m": newm, "v": newv, "step": step}, metrics

@@ -1,0 +1,67 @@
+"""Serving steps: batched prefill + single-token decode, pjit'd.
+
+``make_serve_fns`` returns jitted callables with explicit shardings — the
+same functions the dry-run lowers for the ``prefill_*`` / ``decode_*`` /
+``long_*`` shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..archs.lm import ModelApi
+from .sharding import (batch_shardings, cache_shardings, params_shardings)
+
+Params = Dict[str, Any]
+
+__all__ = ["ServeFns", "make_serve_fns"]
+
+
+@dataclasses.dataclass
+class ServeFns:
+    prefill: Callable[..., Tuple[jnp.ndarray, Any]]
+    decode: Callable[..., Tuple[jnp.ndarray, Any]]
+    params_sh: Any
+    cache_sh: Any
+
+
+def make_serve_fns(api: ModelApi, mesh, *, batch: int, max_len: int,
+                   has_patches: bool = False) -> ServeFns:
+    from ..archs.act_sharding import set_activation_mesh
+    set_activation_mesh(mesh, pure_dp=api.cfg.pure_dp)
+    cfg = api.cfg
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_sh = params_shardings(params_shape, mesh, pure_dp=cfg.pure_dp)
+    cache_shape = jax.eval_shape(lambda: api.init_cache(batch, max_len))
+    c_sh = cache_shardings(cache_shape, mesh, pure_dp=cfg.pure_dp)
+
+    def prefill(params, tokens, cache, patches=None):
+        logits, cache = api.forward(params, tokens, patches=patches,
+                                    caches=cache, last_only=True)
+        return logits, cache
+
+    def decode(params, tokens, cache, positions):
+        logits, cache = api.forward(params, tokens, caches=cache,
+                                    positions=positions)
+        return logits, cache
+
+    tok_sh = lambda shape: batch_shardings(
+        {"t": jax.ShapeDtypeStruct(shape, jnp.int32)}, mesh)["t"]
+    rep = NamedSharding(mesh, P())
+
+    prefill_jit = jax.jit(
+        prefill,
+        in_shardings=(p_sh, None, c_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,))
+    decode_jit = jax.jit(
+        decode,
+        in_shardings=(p_sh, None, c_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,))
+    return ServeFns(prefill=prefill_jit, decode=decode_jit, params_sh=p_sh,
+                    cache_sh=c_sh)

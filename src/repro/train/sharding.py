@@ -1,0 +1,126 @@
+"""Sharding-spec builders for train/serve state (params, optimizer, caches,
+batches) with divisibility-checked fallbacks.
+
+Rules follow DESIGN.md §5: parameters FSDP-shard over 'data' and
+tensor-shard over 'model'; batches shard over ('pod','data'); KV caches
+shard batch→data and heads→model, degrading to sequence→model (decode
+sequence parallelism) when the head count doesn't divide the model axis —
+the GQA-few-KV-heads case.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..archs.common import batch_axes, param_specs
+
+Params = Dict[str, Any]
+
+__all__ = ["named", "params_shardings", "opt_shardings", "batch_shardings",
+           "cache_shardings", "tree_size_bytes"]
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def _axsize(mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def params_shardings(params_shape: Params, mesh, *, pure_dp: bool = False):
+    return named(mesh, param_specs(params_shape, mesh, pure_dp=pure_dp))
+
+
+def opt_shardings(params_shape: Params, mesh, *, pure_dp: bool = False):
+    pspec = param_specs(params_shape, mesh, pure_dp=pure_dp)
+    return {"m": named(mesh, pspec), "v": named(mesh, pspec),
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_shardings(batch_shape: Params, mesh, *, pure_dp: bool = False):
+    """Leading dim → batch axes (when divisible), rest replicated."""
+    baxes = batch_axes(mesh)
+    if pure_dp and "model" in mesh.axis_names:
+        baxes = baxes + ("model",)
+    bsize = int(np.prod([_axsize(mesh, a) for a in baxes]))
+
+    def spec(x):
+        if x.ndim == 0:
+            return P()
+        if x.shape[0] % bsize == 0 and x.shape[0] > 0:
+            return P(baxes, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+    return named(mesh, jax.tree_util.tree_map(spec, batch_shape))
+
+
+def cache_shardings(cache_shape: Params, mesh, *, pure_dp: bool = False):
+    """KV caches: batch→data axes, heads→model (or seq→model fallback)."""
+    baxes = batch_axes(mesh)
+    msize = _axsize(mesh, "model")
+    m_name: Optional[str] = "model"
+    if pure_dp and "model" in mesh.axis_names:
+        baxes = baxes + ("model",)
+        msize = 1
+        m_name = None
+    bsize = int(np.prod([_axsize(mesh, a) for a in baxes]))
+
+    def spec_leaf(path: str, x) -> P:
+        nd = x.ndim
+        if nd <= 1:
+            return P()
+        name = path.split("/")[-1]
+        if name in ("k", "v") and nd == 5:          # (L, B, H, C, Dh)
+            L, B, H, C, Dh = x.shape
+            b_ax = baxes if B % bsize == 0 else None
+            if m_name and H % msize == 0:
+                return P(None, b_ax, m_name, None, None)
+            if m_name and C % msize == 0:
+                return P(None, b_ax, None, m_name, None)
+            return P(None, b_ax, None, None, None)
+        if name == "h" and nd == 4:                 # (L, B, din, N)
+            L, B, din, N = x.shape
+            b_ax = baxes if B % bsize == 0 else None
+            m_ax = m_name if m_name and din % msize == 0 else None
+            return P(None, b_ax, m_ax, None)
+        if name == "conv" and nd == 4:              # (L, B, k-1, din)
+            L, B, K, din = x.shape
+            b_ax = baxes if B % bsize == 0 else None
+            m_ax = m_name if m_name and din % msize == 0 else None
+            return P(None, b_ax, None, m_ax)
+        if name == "S" and nd == 5:                 # (L, B, H, dk, dv)
+            L, B, H, dk, dv = x.shape
+            b_ax = baxes if B % bsize == 0 else None
+            m_ax = m_name if m_name and H % msize == 0 else None
+            return P(None, b_ax, m_ax, None, None)
+        if name == "x_prev" and nd == 4:            # (L, B, 1, D)
+            L, B, _, D = x.shape
+            b_ax = baxes if B % bsize == 0 else None
+            m_ax = m_name if m_name and D % msize == 0 else None
+            return P(None, b_ax, None, m_ax)
+        if name == "enc_out" and nd == 3:           # (B, Se, D)
+            B, Se, D = x.shape
+            b_ax = baxes if B % bsize == 0 else None
+            m_ax = m_name if m_name and D % msize == 0 else None
+            return P(b_ax, None, m_ax)
+        return P(*([None] * nd))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_shape)[0]
+    treedef = jax.tree_util.tree_structure(cache_shape)
+    specs = []
+    for kp, x in flat:
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        specs.append(spec_leaf(path, x))
+    return named(mesh, jax.tree_util.tree_unflatten(treedef, specs))
+
+
+def tree_size_bytes(tree_shape: Params) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree_shape))

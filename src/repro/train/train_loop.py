@@ -1,0 +1,143 @@
+"""pjit'd training step + loop: grad accumulation, WSD AdamW, metrics.
+
+``make_train_step`` returns a jitted (params, opt_state, batch) → (params,
+opt_state, metrics) function with explicit in/out shardings — the same
+callable the multi-pod dry-run lowers with ShapeDtypeStructs and the smoke
+trainers execute on host devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..archs.lm import ModelApi
+from .optimizer import OptConfig, opt_init, opt_update
+from .sharding import (batch_shardings, named, opt_shardings,
+                       params_shardings)
+
+Params = Dict[str, Any]
+
+__all__ = ["make_train_step", "make_init", "train_loop", "TrainStepFns"]
+
+
+@dataclasses.dataclass
+class TrainStepFns:
+    init: Callable[[jax.Array, Params], Tuple[Params, Params]]
+    step: Callable[..., Tuple[Params, Params, Dict[str, jnp.ndarray]]]
+    params_sh: Any
+    opt_sh: Any
+    batch_sh: Any
+
+
+def _accum_grads(loss_fn, params, batch, accum: int):
+    """Microbatch gradient accumulation via scan (memory = 1 microbatch)."""
+    def reshape(x):
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+    mbs = jax.tree_util.tree_map(reshape, batch)
+
+    def body(carry, mb):
+        g_acc, l_acc = carry
+        # Checkpoint the microbatch: without it the scan saves every
+        # microbatch's residuals and accumulation wins no memory.
+        l, g = jax.checkpoint(
+            lambda p, m: jax.value_and_grad(loss_fn)(p, m))(params, mb)
+        g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+        return (g_acc, l_acc + l), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    (g, l), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), mbs)
+    scale = 1.0 / accum
+    return l * scale, jax.tree_util.tree_map(lambda x: x * scale, g)
+
+
+def make_train_step(api: ModelApi, mesh, batch_shape: Params,
+                    opt_cfg: OptConfig = OptConfig(), *,
+                    accum: int = 1, donate: bool = True) -> TrainStepFns:
+    from ..archs.act_sharding import set_activation_mesh
+    set_activation_mesh(mesh, pure_dp=api.cfg.pure_dp)
+    pure_dp = api.cfg.pure_dp
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_sh = params_shardings(params_shape, mesh, pure_dp=pure_dp)
+    o_sh = opt_shardings(params_shape, mesh, pure_dp=pure_dp)
+    b_sh = batch_shardings(batch_shape, mesh, pure_dp=pure_dp)
+    metr_sh = {"loss": NamedSharding(mesh, P()),
+               "lr": NamedSharding(mesh, P()),
+               "grad_norm": NamedSharding(mesh, P())}
+
+    def loss_fn(p, mb):
+        return api.loss(p, mb)
+
+    def step(params, opt_state, batch):
+        if accum > 1:
+            loss, grads = _accum_grads(loss_fn, params, batch, accum)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = opt_update(params, grads, opt_state,
+                                                opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    step_jit = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, metr_sh),
+        donate_argnums=(0, 1) if donate else ())
+
+    def init(key, _unused=None):
+        params = jax.jit(api.init, out_shardings=p_sh)(key)
+        opt_state = jax.jit(functools.partial(opt_init, cfg=opt_cfg),
+                            out_shardings=o_sh)(params)
+        return params, opt_state
+
+    return TrainStepFns(init=init, step=step_jit, params_sh=p_sh,
+                        opt_sh=o_sh, batch_sh=b_sh)
+
+
+def make_init(api: ModelApi, mesh):
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_sh = params_shardings(params_shape, mesh)
+    return jax.jit(api.init, out_shardings=p_sh), p_sh
+
+
+def train_loop(api: ModelApi, mesh, data_iter, *, steps: int,
+               opt_cfg: OptConfig = OptConfig(), accum: int = 1,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0, log_every: int = 10,
+               seed: int = 0,
+               on_step: Optional[Callable[[int, Dict], None]] = None
+               ) -> Dict[str, Any]:
+    """Run a (smoke-scale) training loop on the host mesh; returns history."""
+    first = next(data_iter)
+    batch_shape = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), first)
+    fns = make_train_step(api, mesh, batch_shape, opt_cfg, accum=accum)
+    params, opt_state = fns.init(jax.random.PRNGKey(seed))
+    history = []
+    batch = first
+    t0 = time.perf_counter()
+    step_idx = 0
+    while step_idx < steps:
+        params, opt_state, metrics = fns.step(params, opt_state, batch)
+        step_idx += 1
+        if step_idx % log_every == 0 or step_idx == steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step_idx
+            m["sec"] = time.perf_counter() - t0
+            history.append(m)
+        if on_step is not None:
+            on_step(step_idx, metrics)
+        if checkpoint_dir and checkpoint_every and \
+                step_idx % checkpoint_every == 0:
+            from .checkpoint import save_checkpoint
+            save_checkpoint(checkpoint_dir, step_idx, params, opt_state)
+        if step_idx < steps:
+            batch = next(data_iter)
+    return {"history": history, "params": params, "opt_state": opt_state,
+            "fns": fns}

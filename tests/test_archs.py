@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (required deliverable f) + consistency."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.archs.blocks import apply_moe, init_moe, _attend, _attend_chunked
+from repro.archs.registry import (ARCH_IDS, build_model, get_config,
+                                  get_smoke_config)
+
+
+def _batch(cfg, B, S, rng):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "audio":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch_id):
+    """Reduced config: one forward + one train step, shapes + no NaNs."""
+    cfg = get_smoke_config(arch_id).with_(dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S, rng)
+    logits, _ = api.forward(params, batch["tokens"],
+                            patches=batch.get("patches"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    loss, grads = jax.value_and_grad(api.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch_id):
+    cfg = get_smoke_config(arch_id).with_(dtype="float32")
+    if cfg.n_experts:
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S, rng)
+    full, _ = api.forward(params, batch["tokens"],
+                          patches=batch.get("patches"))
+    P = cfg.n_patches if cfg.family == "vlm" else 0
+    cache = api.init_cache(B, 32 + P)
+    lg, cache = api.forward(params, batch["tokens"][:, :8], caches=cache,
+                            patches=batch.get("patches"))
+    errs = [np.abs(np.asarray(lg) - np.asarray(full[:, :8])).max()]
+    for t in range(8, S):
+        pos = jnp.full((B, 1), t + P)
+        lg, cache = api.forward(params, batch["tokens"][:, t:t + 1],
+                                caches=cache, positions=pos)
+        errs.append(np.abs(np.asarray(lg[:, 0])
+                           - np.asarray(full[:, t])).max())
+    assert max(errs) < 1e-3, f"{arch_id}: {max(errs)}"
+
+
+def test_exact_full_configs_match_assignment():
+    dims = {
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+    }
+    for aid, (L, d, h, kv, f, v) in dims.items():
+        c = get_config(aid)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff,
+                c.vocab) == (L, d, h, kv, f, v), aid
+    moe = get_config("dbrx-132b")
+    assert (moe.n_experts, moe.top_k) == (16, 4)
+    moe = get_config("moonshot-v1-16b-a3b")
+    assert (moe.n_experts, moe.top_k) == (64, 6)
+    jam = get_config("jamba-1.5-large-398b")
+    assert (jam.n_experts, jam.top_k, jam.attn_every) == (16, 2, 8)
+    assert get_config("qwen2-72b").qkv_bias
+
+
+def test_moe_sort_equals_einsum_dispatch():
+    cfg = get_smoke_config("dbrx-132b").with_(dtype="float32")
+    cfg = cfg.with_(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    p = init_moe(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(np.random.default_rng(2).normal(
+        size=(3, 32, cfg.d_model)), jnp.float32)
+    a = apply_moe(cfg, p, x, impl="sort")
+    b = apply_moe(cfg, p, x, impl="einsum")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_chunked_attention_matches_einsum():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 4, 256, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 256, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 256, 32)), jnp.float32)
+    ref = _attend(q, k, v, causal=True, window=0, kv_len=None,
+                  use_flash=False)
+    got = _attend_chunked(q, k, v, causal=True, window=0, kv_len=None,
+                          q_start=None, bq=64, bk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)

@@ -1,0 +1,109 @@
+"""Extended coverage: elastic resharding, HMOOC3⊆HMOOC1, windowed decode,
+runtime step adaptation, pure-DP shardings."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.archs.common import param_specs
+from repro.archs.registry import build_model, get_smoke_config
+from repro.cluster.runtime_adapt import StepAdapter
+from repro.core.moo.hmooc import _hmooc1_fixed_c, _hmooc3_extremes
+from repro.core.moo.pareto import pareto_mask_np
+from repro.launch.mesh import make_host_mesh
+from repro.train.elastic import reshard_state
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 4), st.integers(2, 6),
+       st.randoms(use_true_random=False))
+def test_hmooc3_extremes_subset_of_exact_front(N, m, B, rnd):
+    """Every HMOOC3 extreme point lies ON the exact per-θc Pareto front."""
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    Fb = rng.random((N, m, B, 2)) * 10
+    Ib = np.tile(np.arange(B), (N, m, 1))
+    E, _ = _hmooc3_extremes(Fb, Ib)
+    for c in range(N):
+        full, _ = _hmooc1_fixed_c(Fb[c], Ib[c])
+        for v in range(2):
+            pt = E[c, v]
+            on_front = np.any(np.all(np.isclose(full, pt, atol=1e-9), -1))
+            assert on_front
+
+
+def test_elastic_reshard_roundtrip():
+    cfg = get_smoke_config("glm4-9b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    new_mesh = make_host_mesh((1, 1), ("data", "model"))
+    moved = reshard_state(params, params_shape, new_mesh)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(moved)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_pure_dp_specs_have_no_model_axis():
+    cfg = get_smoke_config("rwkv6-1.6b")
+    api = build_model(cfg)
+    shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    specs = param_specs(shape, mesh, pure_dp=True)
+    for s in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: hasattr(x, "index")):
+        for entry in s:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            assert "model" not in axes or "data" in axes  # only via fsdp pair
+
+
+def test_windowed_decode_rolls():
+    cfg = get_smoke_config("jamba-1.5-large-398b").with_(
+        dtype="float32", window=8)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, 16)))
+    cache = api.init_cache(1, 8)           # window-sized rolling cache
+    lg, cache = api.forward(params, tokens, caches=cache)
+    # Decode a few steps within the window.
+    for t in range(16, 20):
+        pos = jnp.full((1, 1), t)
+        lg, cache = api.forward(params, tokens[:, :1], caches=cache,
+                                positions=pos)
+        assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_step_adapter_recommends_and_hysteresis():
+    ad = StepAdapter(candidates=[1, 2, 4], min_gain=0.1, max_rejits=2)
+    assert ad.recommend() is None
+    for _ in range(3):
+        ad.observe(4, 10.0)
+    ad.observe(2, 5.0)                      # much faster
+    ad.observe(4, 10.0)
+    rec = ad.recommend()
+    assert rec == 2
+    # After exhausting the re-jit budget, stays put.
+    ad._rejits = 2
+    ad.observe(4, 50.0)
+    assert ad.recommend() is None
+
+
+def test_rwkv_chunked_grad_matches_scan():
+    cfg_s = get_smoke_config("rwkv6-1.6b").with_(dtype="float32",
+                                                 rwkv_impl="scan")
+    cfg_c = cfg_s.with_(rwkv_impl="chunked", rwkv_chunk=64)
+    api_s, api_c = build_model(cfg_s), build_model(cfg_c)
+    p = api_s.init(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg_s.vocab, (1, 128)))
+    batch = {"tokens": tokens, "labels": tokens}
+    gs = jax.grad(api_s.loss)(p, batch)
+    gc = jax.grad(api_c.loss)(p, batch)
+    for a, b in zip(jax.tree_util.tree_leaves(gs),
+                    jax.tree_util.tree_leaves(gc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-3)

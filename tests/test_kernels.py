@@ -1,0 +1,67 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import ml_dtypes
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+from repro.kernels.pareto_filter.ops import pareto_filter, pareto_mask_ref
+from repro.kernels.ws_reduce.ops import ws_reduce, ws_reduce_ref
+
+
+@pytest.mark.parametrize("n,k", [(4, 2), (128, 2), (200, 3), (513, 4),
+                                 (64, 8), (1, 2)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_pareto_filter(n, k, dtype):
+    rng = np.random.default_rng(n * 10 + k)
+    F = jnp.asarray(rng.integers(0, 9, size=(n, k)).astype(dtype))
+    valid = jnp.asarray(rng.random(n) > 0.15)
+    got = pareto_filter(F, valid)
+    ref = pareto_mask_ref(F, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("m,B,k,nw", [(1, 8, 2, 3), (4, 130, 2, 11),
+                                      (3, 48, 3, 33), (2, 256, 4, 128)])
+def test_ws_reduce(m, B, k, nw):
+    rng = np.random.default_rng(m * 100 + B)
+    F = rng.random((m, B, k)).astype(np.float32)
+    F[:, -2:] = np.inf                       # padded bank slots
+    W = rng.random((nw, k)).astype(np.float32)
+    v, i = ws_reduce(jnp.asarray(F), jnp.asarray(W))
+    vr, ir = ws_reduce_ref(jnp.nan_to_num(jnp.asarray(F), posinf=1e30),
+                           jnp.asarray(W))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Skv,D,causal",
+    [(1, 4, 4, 128, 128, 64, True),
+     (2, 8, 2, 256, 256, 64, True),      # GQA
+     (1, 4, 1, 100, 100, 128, True),     # ragged + MQA
+     (1, 4, 2, 1, 300, 64, False),       # decode
+     (1, 8, 4, 96, 480, 64, True),       # continuation chunk
+     (2, 2, 2, 64, 64, 128, False)])
+def test_flash_attention_f32(B, Hq, Hkv, Sq, Skv, D, causal):
+    rng = np.random.default_rng(Sq + Skv)
+    q = jnp.asarray(rng.normal(size=(B, Hq, Sq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Skv, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    shape_q = (1, 4, 128, 128)
+    q = jnp.asarray(rng.normal(size=shape_q).astype(ml_dtypes.bfloat16))
+    k = jnp.asarray(rng.normal(size=shape_q).astype(ml_dtypes.bfloat16))
+    v = jnp.asarray(rng.normal(size=shape_q).astype(ml_dtypes.bfloat16))
+    got = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    assert got.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)

@@ -1,0 +1,63 @@
+"""GTN performance models: featurization, training sanity, persistence."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.models.features import (featurize_plan, featurize_subq,
+                                        lap_positional_encoding)
+from repro.core.models.training import build_dataset, evaluate, train_model
+from repro.queryengine.trace import collect_traces
+from repro.queryengine.workloads import default_workload, make_benchmark
+
+
+@pytest.fixture(scope="module")
+def traces():
+    qs = default_workload("tpch", 2)[:24]
+    return collect_traces(qs, 12, seed=0)
+
+
+def test_featurization_shapes():
+    q = make_benchmark("tpch")[2]
+    X, pe, bias, mask = featurize_subq(q, 0, use_est=True, n_pad=4)
+    assert X.shape == (4, 20) and pe.shape == (4, 4)
+    assert bias.shape == (4, 4, 3) and mask.shape == (4,)
+    X, pe, bias, mask = featurize_plan(q, use_est=False, n_pad=32)
+    assert X.shape[0] == 32 and mask.sum() == len(q.ops)
+
+
+def test_lap_pe_deterministic_and_orthogonalish():
+    A = np.zeros((5, 5), np.float32)
+    for i in range(4):
+        A[i, i + 1] = 1.0
+    p1 = lap_positional_encoding(A, 4)
+    p2 = lap_positional_encoding(A, 4)
+    np.testing.assert_array_equal(p1, p2)
+    assert np.isfinite(p1).all()
+
+
+def test_model_trains_and_roundtrips(tmp_path, traces):
+    ds, cfg = build_dataset(traces, "subq")
+    m = train_model(ds, cfg, steps=150, batch=256, seed=0)
+    met = evaluate(m, ds, split="test")
+    assert met.corr[0] > 0.5          # latency correlates after brief training
+    assert met.corr[1] > 0.8          # IO is easier (paper Table 3)
+    assert met.xput > 1e4
+    # persistence
+    path = str(tmp_path / "model.npz")
+    m.save(path)
+    from repro.core.models.perf_model import PerfModel
+    m2 = PerfModel.load(cfg, path)
+    emb = m.embed(traces.queries[0], 0)
+    theta = np.random.default_rng(0).random((8, cfg.theta_dim),
+                                            ).astype(np.float32)
+    nond = np.zeros(12, np.float32)
+    np.testing.assert_allclose(m.predict(emb, theta, nond),
+                               m2.predict(emb, theta, nond), rtol=1e-5)
+
+
+def test_qs_and_lqp_datasets(traces):
+    ds_qs, cfg_qs = build_dataset(traces, "qs")
+    assert cfg_qs.theta_dim == 10            # θp dropped at runtime
+    ds_lqp, cfg_lqp = build_dataset(traces, "lqp")
+    assert cfg_lqp.theta_dim == 19
+    assert ds_lqp.n == traces.q_theta_c.shape[0]

@@ -1,0 +1,76 @@
+"""Property tests for Pareto primitives (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.moo.pareto import (hypervolume_2d, kung_2d_np, pareto_mask,
+                                   pareto_mask_np)
+
+
+def brute_mask(F):
+    n = F.shape[0]
+    out = np.ones(n, bool)
+    for i in range(n):
+        for j in range(n):
+            if (F[j] <= F[i]).all() and (F[j] < F[i]).any():
+                out[i] = False
+                break
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 60), st.integers(2, 4), st.integers(0, 6),
+       st.randoms(use_true_random=False))
+def test_mask_matches_bruteforce(n, k, levels, rnd):
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    # Integer grids force many ties/duplicates (the tricky cases).
+    F = rng.integers(0, levels + 2, size=(n, k)).astype(float)
+    assert (pareto_mask_np(F) == brute_mask(F)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 80), st.randoms(use_true_random=False))
+def test_2d_sweep_matches_bruteforce(n, rnd):
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    F = rng.integers(0, 7, size=(n, 2)).astype(float)
+    got = pareto_mask_np(F)          # uses the sweep for n > 64
+    assert (got == brute_mask(F)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.randoms(use_true_random=False))
+def test_jnp_mask_matches_np(n, rnd):
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    F = rng.random((n, 2)).astype(np.float32)
+    got = np.asarray(pareto_mask(F))
+    assert (got == pareto_mask_np(F)).all()
+
+
+def test_mask_scale_invariance():
+    rng = np.random.default_rng(0)
+    F = rng.random((50, 2))
+    m1 = pareto_mask_np(F)
+    m2 = pareto_mask_np(F * np.array([1000.0, 1e-3]) + 5)
+    assert (m1 == m2).all()
+
+
+def test_hypervolume_monotone_in_points():
+    rng = np.random.default_rng(1)
+    F = rng.random((30, 2))
+    ref = np.array([2.0, 2.0])
+    hv_all = hypervolume_2d(F, ref)
+    hv_some = hypervolume_2d(F[:10], ref)
+    assert hv_all >= hv_some - 1e-12
+    assert hypervolume_2d(F[:0], ref) == 0.0
+    # A single point dominating everything gives the max box.
+    hv1 = hypervolume_2d(np.array([[0.0, 0.0]]), ref)
+    assert hv1 == pytest.approx(4.0)
+
+
+def test_invalid_rows_never_optimal_nor_dominating():
+    F = np.array([[np.inf, 0.0], [1.0, 1.0], [2.0, 2.0]])
+    m = pareto_mask_np(F)
+    assert not m[0] and m[1] and not m[2]
+    valid = np.array([True, False, True])
+    m = pareto_mask_np(np.array([[0.0, 0.0], [1.0, 1.0], [2.0, 2.0]]), valid)
+    assert m.tolist() == [True, False, False]

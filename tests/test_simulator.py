@@ -1,0 +1,102 @@
+"""Simulator + workload + AQE invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tuning.spark_space import (theta_c_space, theta_p_space,
+                                           theta_s_space)
+from repro.queryengine.aqe import run_with_aqe
+from repro.queryengine.plan import topo_order
+from repro.queryengine.simulator import (JOIN_BHJ, JOIN_SHJ, JOIN_SMJ,
+                                         default_theta, simulate_query,
+                                         upgrade_joins)
+from repro.queryengine.workloads import make_benchmark, make_query
+
+
+@pytest.fixture(scope="module")
+def tpch():
+    return make_benchmark("tpch")
+
+
+def test_workload_shapes(tpch):
+    assert len(tpch) == 22
+    counts = [q.n_subqs for q in tpch]
+    assert max(counts) == 12                   # paper: Q9-like has 12 subQs
+    ds = make_benchmark("tpcds")
+    assert len(ds) == 102
+    assert max(q.n_subqs for q in ds) >= 40    # paper: up to 47
+
+    for q in tpch:
+        order = q.topo_subqs()
+        assert sorted(order) == list(range(q.n_subqs))
+        # agg subQ is last; scan subQs have no children
+        for sq in q.subqs:
+            if sq.kind == "scan":
+                assert not sq.children
+
+
+def test_workload_determinism():
+    a = make_query("tpch", 3, variant=1)
+    b = make_query("tpch", 3, variant=1)
+    assert a.subqs[0].out_rows == b.subqs[0].out_rows
+    c = make_query("tpch", 3, variant=2)
+    assert any(x.out_rows != y.out_rows
+               for x, y in zip(a.subqs, c.subqs))
+
+
+def test_simulation_positive_and_finite(tpch):
+    rng = np.random.default_rng(0)
+    cs, ps, ss = theta_c_space(), theta_p_space(), theta_s_space()
+    tc = cs.to_raw(cs.sample_lhs(rng, 16))
+    tp = ps.to_raw(ps.sample_lhs(rng, 16))
+    ts = ss.to_raw(ss.sample_lhs(rng, 16))
+    for q in tpch[:5]:
+        r = simulate_query(q, tc, tp, ts)
+        for arr in (r.ana_latency, r.actual_latency, r.io_gb, r.cost):
+            assert np.isfinite(arr).all() and (arr > 0).all()
+        assert (r.actual_latency >= r.ana_latency * 0.99).all()
+
+
+def test_analytical_tracks_actual(tpch):
+    rng = np.random.default_rng(1)
+    cs, ps, ss = theta_c_space(), theta_p_space(), theta_s_space()
+    n = 64
+    ana, act = [], []
+    for q in tpch:
+        tc = cs.to_raw(cs.sample_lhs(rng, n))
+        tp = ps.to_raw(ps.sample_lhs(rng, n))
+        ts = ss.to_raw(ss.sample_lhs(rng, n))
+        r = simulate_query(q, tc, tp, ts)
+        ana.extend(r.ana_latency)
+        act.extend(r.actual_latency)
+    corr = np.corrcoef(ana, act)[0, 1]
+    assert corr > 0.85        # paper Fig. 5: 0.876–0.972
+
+
+def test_join_upgrade_only_toward_broadcast():
+    planned = np.array([JOIN_SMJ, JOIN_SHJ, JOIN_BHJ, -1.0])
+    runtime = np.array([JOIN_BHJ, JOIN_SMJ, JOIN_SMJ, JOIN_BHJ])
+    out = upgrade_joins(planned, runtime)
+    assert out.tolist() == [JOIN_BHJ, JOIN_SHJ, JOIN_BHJ, -1.0]
+
+
+def test_aqe_pruning_rates(tpch):
+    tc, tp, ts = default_theta(1)
+    sent = tot = 0
+    for q in tpch:
+        r = run_with_aqe(q, tc[0], tp[0], ts[0], prune=True)
+        sent += r.requests_sent
+        tot += r.requests_total
+        r2 = run_with_aqe(q, tc[0], tp[0], ts[0], prune=False)
+        assert r2.requests_sent >= r.requests_sent
+    rate = 1 - sent / tot
+    assert 0.5 < rate < 0.99   # paper §5.2: 86% (TPC-H)
+
+
+def test_more_cores_not_slower_analytically(tpch):
+    """Analytical latency = task-seconds / cores: monotone in cores."""
+    q = tpch[8]
+    tc, tp, ts = default_theta(2)
+    tc[1, 2] = tc[0, 2] * 4       # 4× executors
+    r = simulate_query(q, tc, tp, ts)
+    assert r.ana_latency[1] < r.ana_latency[0]

@@ -1,0 +1,119 @@
+"""Training loop, checkpointing, elastic machinery, data pipeline."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.archs.registry import build_model, get_smoke_config
+from repro.data.pipeline import data_iterator, make_batch
+from repro.launch.mesh import make_host_mesh
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.elastic import assign_data_shards, plan_elastic_mesh
+from repro.train.optimizer import OptConfig, wsd_schedule
+from repro.train.train_loop import make_train_step, train_loop
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("glm4-9b")
+    api = build_model(cfg)
+    mesh = make_host_mesh()
+    return cfg, api, mesh
+
+
+def test_wsd_schedule_shape():
+    cfg = OptConfig(lr=1e-3, total_steps=100, warmup_steps=10)
+    lrs = [float(wsd_schedule(cfg, jnp.asarray(s)))
+           for s in [0, 5, 10, 50, 89, 99]]
+    assert lrs[0] < lrs[1] < lrs[2]           # warmup
+    assert lrs[2] == pytest.approx(lrs[3])     # stable
+    assert lrs[4] > lrs[5]                     # decay
+    assert lrs[5] >= 0.09e-3                   # floor ≈ 0.1·lr
+
+
+def test_train_loss_decreases(setup):
+    cfg, api, mesh = setup
+    it = data_iterator(cfg, global_batch=4, seq_len=32, seed=0)
+    opt = OptConfig(lr=3e-3, total_steps=30, warmup_steps=3)
+    out = train_loop(api, mesh, it, steps=30, opt_cfg=opt, log_every=1)
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0] * 0.9
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_grad_accum_equivalence(setup):
+    """accum=2 must give (numerically) the same update as accum=1."""
+    cfg, api, mesh = setup
+    b = make_batch(cfg, global_batch=4, seq_len=16, step=0)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    shape = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+    opt = OptConfig(lr=1e-3)
+    f1 = make_train_step(api, mesh, shape, opt, accum=1, donate=False)
+    f2 = make_train_step(api, mesh, shape, opt, accum=2, donate=False)
+    p1, o1 = f1.init(jax.random.PRNGKey(0))
+    p2, o2 = f2.init(jax.random.PRNGKey(0))
+    p1n, _, m1 = f1.step(p1, o1, batch)
+    p2n, _, m2 = f2.step(p2, o2, batch)
+    # Microbatch statistics differ slightly (per-μb mean), but the update
+    # direction/scale must agree closely.
+    d1 = jax.tree_util.tree_leaves(p1n)[0] - jax.tree_util.tree_leaves(p1)[0]
+    d2 = jax.tree_util.tree_leaves(p2n)[0] - jax.tree_util.tree_leaves(p2)[0]
+    cos = float(jnp.sum(d1 * d2) /
+                (jnp.linalg.norm(d1) * jnp.linalg.norm(d2) + 1e-12))
+    assert cos > 0.98
+
+
+def test_checkpoint_roundtrip_and_elastic(tmp_path, setup):
+    cfg, api, mesh = setup
+    params = api.init(jax.random.PRNGKey(3))
+    save_checkpoint(str(tmp_path), 7, params)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), {"params": params})
+    restored, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a, dtype=np.float32),
+                                      np.asarray(b, dtype=np.float32))
+    # Elastic mesh planning.
+    (dp, tp), axes = plan_elastic_mesh(192, prefer_model=16)
+    assert dp * tp <= 192 and tp == 16
+    (dp, tp), _ = plan_elastic_mesh(8, prefer_model=16)
+    assert dp * tp <= 8 and tp >= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 12),
+       st.lists(st.integers(0, 11), max_size=6, unique=True))
+def test_straggler_reassignment(n_shards, n_hosts, stragglers):
+    hosts = list(range(n_hosts))
+    stragglers = [s for s in stragglers if s in hosts]
+    if len(stragglers) == n_hosts:
+        stragglers = stragglers[:-1]
+    plan = assign_data_shards(n_shards, hosts, stragglers)
+    # Every shard assigned exactly once, none to a straggler.
+    got = sorted(s for shards in plan.values() for s in shards)
+    assert got == list(range(n_shards))
+    assert not (set(plan) & set(stragglers))
+    # Deterministic.
+    assert plan == assign_data_shards(n_shards, hosts, stragglers)
+
+
+def test_data_pipeline_determinism_and_sharding():
+    cfg = get_smoke_config("glm4-9b")
+    a = make_batch(cfg, global_batch=8, seq_len=16, step=3, host=0,
+                   n_hosts=2)
+    b = make_batch(cfg, global_batch=8, seq_len=16, step=3, host=0,
+                   n_hosts=2)
+    c = make_batch(cfg, global_batch=8, seq_len=16, step=3, host=1,
+                   n_hosts=2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert (a["tokens"] != c["tokens"]).any()
+    assert a["tokens"].shape == (4, 16)
+    assert (a["labels"][:, -1] == -1).all()
