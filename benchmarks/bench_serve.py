@@ -1,0 +1,218 @@
+"""Serving benchmark: single-query latency + batched tuning throughput.
+
+Measures, on the oracle objective (no trained model needed):
+
+* ``legacy``  — the pre-refactor HMOOC solver (Python loops over
+  representatives × subQs, per-keep DAG gathers) run one query at a time:
+  the "single-query-loop" baseline.
+* ``single``  — the vectorized solver, one ``compile_time_optimize`` per
+  query, no cache.
+* ``batch N`` — ``repro.serve.tune_batch`` over a production-like
+  repeated-template stream at batch sizes 1 / 8 / 32 with a shared
+  effective-set cache + request dedup.
+
+Also verifies, for every benchmark query, that the batched service returns
+exactly the same Pareto front (same points, any order) as the sequential
+solver.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serve.py --out BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.moo.clustering import kmeans_fit
+from repro.core.moo.hmooc import (HMOOCConfig, _crossover, _lhs, _snap_unique,
+                                  dag_aggregate)
+from repro.core.moo.pareto import pareto_mask_np
+from repro.core.moo.wun import wun_select
+from repro.core.tuning.compile_time import compile_time_optimize
+from repro.core.tuning.objectives import StageObjectives
+from repro.queryengine.workloads import make_benchmark, serving_stream
+from repro.serve import TuningService
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor solver (the seed repo's loop structure), kept as the baseline
+# ---------------------------------------------------------------------------
+
+def _legacy_pareto_bank(F, cap):
+    mask = pareto_mask_np(F)
+    idx = np.nonzero(mask)[0]
+    if idx.size > cap:
+        order = idx[np.argsort(F[idx, 0])]
+        keep = np.linspace(0, order.size - 1, cap).round().astype(int)
+        idx = order[keep]
+    return idx
+
+
+def _legacy_subq_tuning(stage_eval, m, d_c, d_ps, cfg, snap_c, snap_ps, rng):
+    """Algorithm 1 with the original per-(representative, subQ) loops."""
+    Uc0 = _snap_unique(_lhs(rng, cfg.n_c_init, d_c), snap_c)
+    km, labels0 = kmeans_fit(Uc0, cfg.n_clusters, rng)
+    reps = snap_c(km.centers) if snap_c is not None else km.centers
+    pool = _lhs(rng, cfg.n_p_pool, d_ps)
+    if snap_ps is not None:
+        pool = snap_ps(pool)
+    C = reps.shape[0]
+    opt_idx, k_obj = [], 2
+    for r in range(C):                        # C × m stage_eval calls
+        Tc = np.tile(reps[r], (pool.shape[0], 1))
+        per_subq = []
+        for i in range(m):
+            F = stage_eval(i, Tc, pool)
+            k_obj = F.shape[1]
+            per_subq.append(_legacy_pareto_bank(F, cfg.max_bank))
+        opt_idx.append(per_subq)
+
+    def assign(Uc, labels):                   # up to C × m more calls
+        N, B = Uc.shape[0], cfg.max_bank
+        F_bank = np.full((N, m, B, k_obj), np.inf)
+        idx_bank = np.full((N, m, B), -1, int)
+        for r in range(C):
+            members = np.nonzero(labels == r)[0]
+            if members.size == 0:
+                continue
+            for i in range(m):
+                sel = opt_idx[r][i]
+                if sel.size == 0:
+                    continue
+                nb = min(sel.size, B)
+                sel = sel[:nb]
+                Tc = np.repeat(Uc[members], nb, axis=0)
+                Tp = np.tile(pool[sel], (members.size, 1))
+                F = stage_eval(i, Tc, Tp).reshape(members.size, nb, k_obj)
+                F_bank[members, i, :nb] = F
+                idx_bank[members, i, :nb] = sel
+        return F_bank, idx_bank
+
+    F0, I0 = assign(Uc0, labels0)
+    Uc1 = _crossover(Uc0, cfg.n_c_enrich, d_c, rng)
+    if snap_c is not None and Uc1.size:
+        Uc1 = _snap_unique(Uc1, snap_c)
+    if Uc1.size:
+        dup = (Uc1[:, None, :] == Uc0[None, :, :]).all(-1).any(1)
+        Uc1 = Uc1[~dup]
+    if Uc1.size:
+        F1, I1 = assign(Uc1, km.assign(Uc1))
+        return (np.concatenate([Uc0, Uc1]), pool,
+                np.concatenate([F0, F1]), np.concatenate([I0, I1]))
+    return Uc0, pool, F0, I0
+
+
+def legacy_optimize(query, weights, cfg) -> Tuple[np.ndarray, int]:
+    """Pre-refactor single-query compile-time solve (oracle objective)."""
+    obj = StageObjectives(query)
+    rng = np.random.default_rng(cfg.seed)
+    Uc, pool, F_bank, idx_bank = _legacy_subq_tuning(
+        obj.stage_eval, obj.m, obj.d_c, obj.d_ps, cfg,
+        obj.snap_c, obj.snap_ps, rng)
+    front, theta_c, theta_ps = dag_aggregate(
+        Uc, pool, F_bank, idx_bank, cfg.dag_method,
+        n_ws_weights=cfg.n_ws_weights)
+    choice, _ = wun_select(front, np.asarray(weights))
+    return front, choice
+
+
+# ---------------------------------------------------------------------------
+# Benchmark
+# ---------------------------------------------------------------------------
+
+def run(bench: str, cfg: HMOOCConfig, batch_sizes: List[int],
+        stream_len: int, seed: int) -> dict:
+    weights = (0.9, 0.1)
+    eval_qs = make_benchmark(bench)
+    stream = serving_stream(bench, stream_len, seed=seed)
+
+    # --- correctness: batched front == sequential front, every query -------
+    svc = TuningService(cfg=cfg)
+    batched = svc.tune_batch(eval_qs, weights)
+    fronts_identical = True
+    max_solve_ms = 0.0
+    for q, r in zip(eval_qs, batched):
+        ref = compile_time_optimize(q, weights=weights, cfg=cfg)
+        a = np.sort(r.front.view([('f0', float), ('f1', float)]), axis=0)
+        b = np.sort(ref.front.view([('f0', float), ('f1', float)]), axis=0)
+        if a.shape != b.shape or not np.array_equal(a, b):
+            fronts_identical = False
+        max_solve_ms = max(max_solve_ms, 1e3 * ref.solve_time)
+
+    # --- legacy single-query loop ------------------------------------------
+    t0 = time.perf_counter()
+    for q in stream:
+        legacy_optimize(q, weights, cfg)
+    t_legacy = time.perf_counter() - t0
+
+    # --- vectorized solver, one query at a time, no cache ------------------
+    t0 = time.perf_counter()
+    for q in stream:
+        compile_time_optimize(q, weights=weights, cfg=cfg)
+    t_single = time.perf_counter() - t0
+
+    # --- batched service ---------------------------------------------------
+    per_batch = {}
+    for bs in batch_sizes:
+        svc = TuningService(cfg=cfg)       # fresh cache per setting
+        t0 = time.perf_counter()
+        for lo in range(0, len(stream), bs):
+            svc.tune_batch(stream[lo:lo + bs], weights)
+        dt = time.perf_counter() - t0
+        per_batch[bs] = {
+            "qps": len(stream) / dt,
+            "total_s": dt,
+            "cache": svc.cache.stats(),
+        }
+
+    legacy_qps = len(stream) / t_legacy
+    bs_top = max(batch_sizes)
+    return {
+        "bench": bench,
+        "stream_len": len(stream),
+        "n_eval_queries": len(eval_qs),
+        "config": {"n_c_init": cfg.n_c_init, "n_p_pool": cfg.n_p_pool,
+                   "dag_method": cfg.dag_method, "seed": cfg.seed},
+        "fronts_identical": fronts_identical,
+        "max_single_solve_ms": max_solve_ms,
+        "legacy_qps": legacy_qps,
+        "legacy_ms_per_query": 1e3 * t_legacy / len(stream),
+        "single_qps": len(stream) / t_single,
+        "single_ms_per_query": 1e3 * t_single / len(stream),
+        "batched": {str(bs): per_batch[bs] for bs in batch_sizes},
+        "speedup_batch_top_vs_legacy":
+            per_batch[bs_top]["qps"] / legacy_qps,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="tpch", choices=["tpch", "tpcds"])
+    ap.add_argument("--batch-sizes", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--stream-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = HMOOCConfig(seed=args.seed)
+    res = run(args.bench, cfg, sorted(args.batch_sizes), args.stream_len,
+              args.seed)
+    print(json.dumps(res, indent=2))
+    top = str(max(args.batch_sizes))
+    print(f"\nlegacy loop: {res['legacy_qps']:.2f} q/s | "
+          f"vectorized single: {res['single_qps']:.2f} q/s | "
+          f"batch {top}: {res['batched'][top]['qps']:.2f} q/s "
+          f"({res['speedup_batch_top_vs_legacy']:.1f}x vs legacy) | "
+          f"fronts identical: {res['fronts_identical']} | "
+          f"max solve {res['max_single_solve_ms']:.0f} ms")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

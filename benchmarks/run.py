@@ -14,6 +14,7 @@ Benchmarks → paper artifacts:
   end_to_end        Table 4      latency reduction @ (0.9, 0.1)
   adaptability      Table 5      preference sweep vs SO-FW
   pruning           §5.2         runtime-request pruning rates
+  serve             (ours)       batched tuning-service throughput
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -56,7 +57,8 @@ def main() -> None:
     nq = None if args.full else 10
 
     from . import bench_cluster, bench_end_to_end, bench_models, bench_moo, \
-        bench_roofline
+        bench_roofline, bench_serve
+    from repro.core.moo.hmooc import HMOOCConfig
 
     registry: Dict[str, Callable[[], List[dict]]] = {
         "model_accuracy": lambda: bench_models.run_model_accuracy(
@@ -86,6 +88,9 @@ def main() -> None:
                                      use_model=use_model)],
         "pruning": lambda: [r for b in ("tpch", "tpcds") for r in
                             bench_end_to_end.run_pruning(b)],
+        "serve": lambda: [bench_serve.run(
+            b, HMOOCConfig(), [1, 8, 32], stream_len=64, seed=0)
+            for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,
         "kernels": bench_cluster.run_kernels,

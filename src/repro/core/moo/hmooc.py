@@ -20,22 +20,50 @@ The stage evaluator abstracts the objective model:
 
 In production it wraps the trained subQ PerfModel; tests can plug the
 analytic simulator or synthetic functions.
+
+Hot paths are array-level: every stage_eval call covers a whole
+representative set or candidate population at once (m calls per phase
+instead of C·m), dominance masks route through the Pallas ``pareto_filter``
+kernel above the small-n threshold (``pareto_mask_fast``), and HMOOC2's
+per-weight bank argmin runs on the ``ws_reduce`` kernel when enabled.
+
+The candidate-sampling half of Algorithm 1 (LHS, clustering, crossover) is
+query-independent; :class:`EffectiveSet` captures it — together with the
+per-representative optimal-θp banks — so a serving layer can reuse it across
+repeated-template traffic (see ``repro.serve``).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .clustering import kmeans_fit
-from .pareto import pareto_mask_np
+from . import pareto as _pareto
+from .pareto import pareto_mask_fast, pareto_mask_np
 
-__all__ = ["HMOOCConfig", "HMOOCResult", "hmooc_solve",
-           "dag_aggregate", "minkowski_merge_2d"]
+__all__ = ["HMOOCConfig", "HMOOCResult", "EffectiveSet", "hmooc_solve",
+           "subq_tuning", "build_candidates", "dag_aggregate",
+           "minkowski_merge_2d"]
 
 StageEval = Callable[[int, np.ndarray, np.ndarray], np.ndarray]
+
+# Score-matrix volume (N·m·B·nw) above which HMOOC2 uses the ws_reduce
+# Pallas kernel.  CPU hosts default to the float64 numpy einsum (exact and
+# faster than interpret mode); TPU routes to the MXU kernel.  None =
+# resolve lazily from the env var / backend (tests monkeypatch directly).
+_WS_MIN_SCORES = None
+
+
+def _ws_min_scores() -> int:
+    if _WS_MIN_SCORES is not None:
+        return _WS_MIN_SCORES
+    return int(os.environ.get(
+        "REPRO_WS_KERNEL_MIN_SCORES",
+        str(1 << 18) if _pareto.backend() == "tpu" else str(1 << 60)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +79,28 @@ class HMOOCConfig:
 
 
 @dataclasses.dataclass
+class EffectiveSet:
+    """Reusable Algorithm 1 artifacts.
+
+    ``Uc``/``labels``/``reps``/``pool`` depend only on the parameter spaces
+    and :class:`HMOOCConfig` (the rng never touches the query), so they are
+    valid for *any* query.  ``opt_idx`` (per-representative per-subQ
+    Pareto-optimal pool indices) is computed from one query's statistics;
+    reusing it is exact for an identical query and a template-level
+    approximation otherwise.
+    """
+    Uc: np.ndarray                                 # (N, d_c) θc candidates
+    labels: np.ndarray                             # (N,) cluster ids
+    reps: np.ndarray                               # (C, d_c) representatives
+    pool: np.ndarray                               # (P, d_ps) θp⊕θs samples
+    opt_idx: Optional[List[List[np.ndarray]]] = None   # [C][m] pool indices
+    k_obj: int = 2
+
+    def without_banks(self) -> "EffectiveSet":
+        return dataclasses.replace(self, opt_idx=None)
+
+
+@dataclasses.dataclass
 class HMOOCResult:
     front: np.ndarray           # (q, k) query-level Pareto objective values
     theta_c: np.ndarray         # (q, d_c) unit
@@ -58,6 +108,7 @@ class HMOOCResult:
     solve_time: float
     n_evals: int
     extras: Dict[str, float]
+    effective_set: Optional[EffectiveSet] = None
 
 
 # ---------------------------------------------------------------------------
@@ -89,7 +140,7 @@ def _crossover(Uc: np.ndarray, n_new: int, d: int,
 
 def _pareto_bank(F: np.ndarray, cap: int) -> np.ndarray:
     """Indices of the non-dominated rows of F (capped, best-first)."""
-    mask = pareto_mask_np(F)
+    mask = pareto_mask_fast(F)
     idx = np.nonzero(mask)[0]
     if idx.size > cap:
         # Keep a spread: sort by first objective, take evenly spaced.
@@ -97,6 +148,133 @@ def _pareto_bank(F: np.ndarray, cap: int) -> np.ndarray:
         keep = np.linspace(0, order.size - 1, cap).round().astype(int)
         idx = order[keep]
     return idx
+
+
+def _lhs(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
+    u = (rng.permuted(np.tile(np.arange(n), (d, 1)), axis=1).T
+         + rng.random((n, d))) / n
+    return u
+
+
+def build_candidates(
+    d_c: int,
+    d_ps: int,
+    cfg: HMOOCConfig,
+    *,
+    snap_c=None,
+    snap_ps=None,
+    rng: Optional[np.random.Generator] = None,
+) -> EffectiveSet:
+    """Query-independent half of Algorithm 1: θc candidates + θp⊕θs pool.
+
+    Covers lines 1–2 plus the crossover enrichment of lines 5–6 (the rng
+    stream is never consumed by stage evaluation, so sampling the enriched
+    set up front is identical to interleaving it with the evaluations).
+    """
+    rng = rng or np.random.default_rng(cfg.seed)
+    # Line 1: init_c (LHS over the unit cube, snapped to valid raw values).
+    Uc0 = _lhs(rng, cfg.n_c_init, d_c)
+    Uc0 = _snap_unique(Uc0, snap_c)
+    # Line 2: cluster.
+    km, labels0 = kmeans_fit(Uc0, cfg.n_clusters, rng)
+    reps = km.centers
+    if snap_c is not None:
+        reps = snap_c(reps)
+    # Shared θp⊕θs pool.
+    pool = _lhs(rng, cfg.n_p_pool, d_ps)
+    if snap_ps is not None:
+        pool = snap_ps(pool)
+    # Lines 5-6: enrich via crossover, assign to existing clusters.
+    Uc1 = _crossover(Uc0, cfg.n_c_enrich, d_c, rng)
+    if snap_c is not None and Uc1.size:
+        Uc1 = _snap_unique(Uc1, snap_c)
+    if Uc1.size:
+        # Drop duplicates of the initial set.
+        dup = (Uc1[:, None, :] == Uc0[None, :, :]).all(-1).any(1)
+        Uc1 = Uc1[~dup]
+    if Uc1.size:
+        labels1 = km.assign(Uc1)
+        Uc = np.concatenate([Uc0, Uc1], 0)
+        labels = np.concatenate([labels0, labels1], 0)
+    else:
+        Uc, labels = Uc0, labels0
+    return EffectiveSet(Uc=Uc, labels=labels, reps=reps, pool=pool)
+
+
+def _optimize_rep_banks(
+    stage_eval: StageEval,
+    m: int,
+    eset: EffectiveSet,
+    cfg: HMOOCConfig,
+) -> Tuple[List[List[np.ndarray]], int, int]:
+    """Line 3: per-representative θp MOO, batched to one eval per subQ.
+
+    Returns (opt_idx [C][m], k_obj, n_evals).
+    """
+    reps, pool = eset.reps, eset.pool
+    C, P = reps.shape[0], pool.shape[0]
+    Tc = np.repeat(reps, P, axis=0)
+    Tp = np.tile(pool, (C, 1))
+    opt_idx: List[List[np.ndarray]] = [[] for _ in range(C)]
+    k_obj = 2
+    n_evals = 0
+    for i in range(m):
+        F = stage_eval(i, Tc, Tp)
+        n_evals += F.shape[0]
+        k_obj = F.shape[1]
+        Fr = F.reshape(C, P, k_obj)
+        for r in range(C):
+            opt_idx[r].append(_pareto_bank(Fr[r], cfg.max_bank))
+    return opt_idx, k_obj, n_evals
+
+
+def _assign_banks(
+    stage_eval: StageEval,
+    m: int,
+    eset: EffectiveSet,
+    cfg: HMOOCConfig,
+    k_obj: int,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Lines 4/7: evaluate members against their rep's optimal θp sets.
+
+    One stage_eval per subQ covering every (member, bank slot) pair at once.
+    """
+    Uc, labels, pool = eset.Uc, eset.labels, eset.pool
+    opt_idx = eset.opt_idx
+    assert opt_idx is not None
+    C = eset.reps.shape[0]
+    N, B = Uc.shape[0], cfg.max_bank
+    F_bank = np.full((N, m, B, k_obj), np.inf)
+    idx_bank = np.full((N, m, B), -1, int)
+    members_by_rep = [np.nonzero(labels == r)[0] for r in range(C)]
+    n_evals = 0
+    for i in range(m):
+        rows_c: List[np.ndarray] = []
+        rows_p: List[np.ndarray] = []
+        chunks: List[Tuple[np.ndarray, np.ndarray]] = []
+        for r in range(C):
+            members = members_by_rep[r]
+            sel = opt_idx[r][i] if i < len(opt_idx[r]) else np.zeros(0, int)
+            if members.size == 0 or sel.size == 0:
+                continue
+            sel = sel[:min(sel.size, B)]
+            rows_c.append(np.repeat(members, sel.size))
+            rows_p.append(np.tile(sel, members.size))
+            chunks.append((members, sel))
+        if not chunks:
+            continue
+        F = stage_eval(i, Uc[np.concatenate(rows_c)],
+                       pool[np.concatenate(rows_p)])
+        n_evals += F.shape[0]
+        off = 0
+        for members, sel in chunks:
+            nb = sel.size
+            cnt = members.size * nb
+            F_bank[members, i, :nb] = \
+                F[off:off + cnt].reshape(members.size, nb, k_obj)
+            idx_bank[members, i, :nb] = sel
+            off += cnt
+    return F_bank, idx_bank, n_evals
 
 
 def subq_tuning(
@@ -118,86 +296,12 @@ def subq_tuning(
       F_bank: (N, m, B, k) objective values (+inf padded),
       idx_bank: (N, m, B) pool indices (−1 padded).
     """
-    rng = rng or np.random.default_rng(cfg.seed)
-    # Line 1: init_c (LHS over the unit cube, snapped to valid raw values).
-    Uc0 = _lhs(rng, cfg.n_c_init, d_c)
-    Uc0 = _snap_unique(Uc0, snap_c)
-    # Line 2: cluster.
-    km, labels0 = kmeans_fit(Uc0, cfg.n_clusters, rng)
-    reps = km.centers
-    if snap_c is not None:
-        reps = snap_c(reps)
-    # Shared θp⊕θs pool.
-    pool = _lhs(rng, cfg.n_p_pool, d_ps)
-    if snap_ps is not None:
-        pool = snap_ps(pool)
-
-    n_evals = 0
-    C = reps.shape[0]
-    # Line 3: optimize_p_moo for each representative × subQ.
-    opt_idx: List[List[np.ndarray]] = []
-    k_obj = None
-    for r in range(C):
-        Tc = np.tile(reps[r], (pool.shape[0], 1))
-        per_subq = []
-        for i in range(m):
-            F = stage_eval(i, Tc, pool)
-            n_evals += F.shape[0]
-            k_obj = F.shape[1]
-            per_subq.append(_pareto_bank(F, cfg.max_bank))
-        opt_idx.append(per_subq)
-
-    def assign(Uc: np.ndarray, labels: np.ndarray
-               ) -> Tuple[np.ndarray, np.ndarray]:
-        """Line 4/7: evaluate members against their rep's optimal θp sets."""
-        nonlocal n_evals
-        N = Uc.shape[0]
-        B = cfg.max_bank
-        F_bank = np.full((N, m, B, k_obj), np.inf)
-        idx_bank = np.full((N, m, B), -1, int)
-        for r in range(C):
-            members = np.nonzero(labels == r)[0]
-            if members.size == 0:
-                continue
-            for i in range(m):
-                sel = opt_idx[r][i]
-                if sel.size == 0:
-                    continue
-                nb = min(sel.size, B)
-                sel = sel[:nb]
-                Tc = np.repeat(Uc[members], nb, axis=0)
-                Tp = np.tile(pool[sel], (members.size, 1))
-                F = stage_eval(i, Tc, Tp).reshape(members.size, nb, k_obj)
-                n_evals += members.size * nb
-                F_bank[members, i, :nb] = F
-                idx_bank[members, i, :nb] = sel
-        return F_bank, idx_bank
-
-    F0, I0 = assign(Uc0, labels0)
-
-    # Line 5-7: enrich via crossover, assign to existing clusters.
-    Uc1 = _crossover(Uc0, cfg.n_c_enrich, d_c, rng)
-    if snap_c is not None and Uc1.size:
-        Uc1 = _snap_unique(Uc1, snap_c)
-    if Uc1.size:
-        # Drop duplicates of the initial set.
-        mask = ~(Uc1[:, None, :] == Uc0[None, :, :]).all(-1).any(1)
-        Uc1 = Uc1[mask]
-    if Uc1.size:
-        labels1 = km.assign(Uc1)
-        F1, I1 = assign(Uc1, labels1)
-        Uc = np.concatenate([Uc0, Uc1], 0)
-        F_bank = np.concatenate([F0, F1], 0)
-        idx_bank = np.concatenate([I0, I1], 0)
-    else:
-        Uc, F_bank, idx_bank = Uc0, F0, I0
-    return Uc, pool, F_bank, idx_bank, n_evals
-
-
-def _lhs(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
-    u = (rng.permuted(np.tile(np.arange(n), (d, 1)), axis=1).T
-         + rng.random((n, d))) / n
-    return u
+    eset = build_candidates(d_c, d_ps, cfg, snap_c=snap_c, snap_ps=snap_ps,
+                            rng=rng)
+    opt_idx, k_obj, n1 = _optimize_rep_banks(stage_eval, m, eset, cfg)
+    eset.opt_idx, eset.k_obj = opt_idx, k_obj
+    F_bank, idx_bank, n2 = _assign_banks(stage_eval, m, eset, cfg, k_obj)
+    return eset.Uc, eset.pool, F_bank, idx_bank, n1 + n2
 
 
 # ---------------------------------------------------------------------------
@@ -214,7 +318,7 @@ def minkowski_merge_2d(F1: np.ndarray, S1: np.ndarray,
     """
     n1, n2 = F1.shape[0], F2.shape[0]
     F = (F1[:, None, :] + F2[None, :, :]).reshape(n1 * n2, -1)
-    mask = pareto_mask_np(F)
+    mask = pareto_mask_fast(F)
     keep = np.nonzero(mask)[0]
     i1, i2 = keep // n2, keep % n2
     sel = np.where(S1[i1] >= 0, S1[i1], S2[i2])
@@ -253,39 +357,71 @@ def _hmooc1_fixed_c(Fb: np.ndarray, Ib: np.ndarray
     return nodes[0]
 
 
+def _ws_pick(Fn: np.ndarray, W: np.ndarray) -> np.ndarray:
+    """argmin_b  W[w] · Fn[c, i, b]  →  (nw, N, m) int.
+
+    Routes through the ws_reduce Pallas kernel (one MXU matmul per bank)
+    above the score-volume threshold; otherwise a float64 numpy einsum that
+    reproduces the reference arithmetic bit-for-bit.
+    """
+    N, m, B, k = Fn.shape
+    nw = W.shape[0]
+    if N * m * B * nw >= _ws_min_scores():
+        from ...kernels.ws_reduce import ws_reduce  # lazy: optional layer
+        _, idx = ws_reduce(Fn.reshape(N * m, B, k), W)   # (nw, N*m)
+        return np.asarray(idx, int).reshape(nw, N, m)
+    scores = np.einsum("wk,cibk->wcib", W, Fn)           # (nw, N, m, B)
+    return np.argmin(scores, axis=-1)
+
+
+def _hmooc2_all(F_bank: np.ndarray, idx_bank: np.ndarray, n_weights: int
+                ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """WS-over-functions aggregation (Alg. 4), batched over θc candidates.
+
+    Returns per-candidate (front (q, k), sel (q, m)) pairs.
+    """
+    N, m, B, k = F_bank.shape
+    assert k == 2
+    ws = np.linspace(0.0, 1.0, n_weights)
+    W = np.stack([ws, 1.0 - ws], axis=1)                 # (nw, 2)
+    # Normalize per OBJECTIVE over each candidate's whole bank (one affine
+    # transform shared by every subQ).  The paper's Alg. 4 normalizes per
+    # subQ, but per-subQ scales give each subQ different effective weights
+    # and void Lemma 1's guarantee that each WS pick is query-level Pareto
+    # optimal (hypothesis-tested in tests/test_hmooc.py); a shared affine
+    # transform commutes with the sum aggregator and preserves the proof.
+    finite = np.isfinite(F_bank)
+    lo = np.min(np.where(finite, F_bank, np.inf), axis=(1, 2), keepdims=True)
+    hi = np.max(np.where(finite, F_bank, -np.inf), axis=(1, 2), keepdims=True)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    with np.errstate(invalid="ignore"):
+        Fn = (F_bank - lo) / span
+    Fn = np.where(finite, Fn, 1e18)
+    j = _ws_pick(Fn, W)                                  # (nw, N, m)
+    jj = np.transpose(j, (1, 0, 2))                      # (N, nw, m)
+    cc = np.arange(N)[:, None, None]
+    ii = np.arange(m)[None, None, :]
+    G = F_bank[cc, ii, jj]                               # (N, nw, m, k)
+    S = idx_bank[cc, ii, jj]                             # (N, nw, m)
+    ok = np.isfinite(G).all(axis=(2, 3))                 # (N, nw)
+    P_all = G.sum(axis=2)                                # (N, nw, k)
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    for c in range(N):
+        rows = np.nonzero(ok[c])[0]
+        if rows.size == 0:
+            out.append((np.zeros((0, k)), np.zeros((0, m), int)))
+            continue
+        P = P_all[c, rows]
+        mask = pareto_mask_fast(P)
+        keep = np.nonzero(mask)[0]
+        out.append((P[keep], S[c, rows][keep]))
+    return out
+
+
 def _hmooc2_fixed_c(Fb: np.ndarray, Ib: np.ndarray, n_weights: int
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """WS-over-functions aggregation under one θc (Alg. 4)."""
-    m, B, k = Fb.shape
-    assert k == 2
-    ws = np.linspace(0.0, 1.0, n_weights)
-    # Normalize per OBJECTIVE over the whole bank (one affine transform
-    # shared by every subQ).  The paper's Alg. 4 normalizes per subQ, but
-    # per-subQ scales give each subQ different effective weights and void
-    # Lemma 1's guarantee that each WS pick is query-level Pareto optimal
-    # (hypothesis-tested in tests/test_hmooc.py); a shared affine transform
-    # commutes with the sum aggregator and preserves the proof.
-    finite = np.where(np.isfinite(Fb), Fb, np.nan)
-    lo = np.nanmin(finite, axis=(0, 1), keepdims=True)
-    hi = np.nanmax(finite, axis=(0, 1), keepdims=True)
-    span = np.where(hi > lo, hi - lo, 1.0)
-    Fn = (Fb - lo) / span
-    Fn = np.where(np.isfinite(Fb), Fn, 1e18)
-    points, sels = [], []
-    for w in ws:
-        score = w * Fn[..., 0] + (1 - w) * Fn[..., 1]     # (m, B)
-        j = np.argmin(score, axis=1)                      # per-subQ argmin
-        F = Fb[np.arange(m), j]
-        if not np.isfinite(F).all():
-            continue
-        points.append(F.sum(0))
-        sels.append(Ib[np.arange(m), j])
-    if not points:
-        return np.zeros((0, k)), np.zeros((0, m), int)
-    P = np.stack(points)
-    mask = pareto_mask_np(P)
-    keep = np.nonzero(mask)[0]
-    return P[keep], np.stack(sels)[keep]
+    return _hmooc2_all(Fb[None], Ib[None], n_weights)[0]
 
 
 def _hmooc3_extremes(F_bank: np.ndarray, idx_bank: np.ndarray
@@ -329,26 +465,25 @@ def dag_aggregate(
         E, J = _hmooc3_extremes(F_bank, idx_bank)
         pts = E.reshape(N * k, k)
         finite = np.isfinite(pts).all(-1)
-        mask = pareto_mask_np(pts) & finite
+        mask = pareto_mask_fast(pts) & finite
         keep = np.nonzero(mask)[0]
         front = pts[keep]
         theta_c = Uc[keep // k]
-        theta_ps = np.zeros((keep.size, m, d_ps))
-        for o, K in enumerate(keep):
-            c, v = K // k, K % k
-            sel = np.take_along_axis(idx_bank[c], J[c, v][:, None],
-                                     axis=1)[:, 0]
-            theta_ps[o] = pool[np.maximum(sel, 0)]
+        c, v = keep // k, keep % k
+        sel = np.take_along_axis(idx_bank[c], J[c, v][:, :, None],
+                                 axis=2)[:, :, 0]          # (q, m)
+        theta_ps = pool[np.maximum(sel, 0)]                # (q, m, d_ps)
         return front, theta_c, theta_ps
 
     fronts, tcs, sels = [], [], []
-    for c in range(N):
-        if method == "hmooc1":
-            F, S = _hmooc1_fixed_c(F_bank[c], idx_bank[c])
-        elif method == "hmooc2":
-            F, S = _hmooc2_fixed_c(F_bank[c], idx_bank[c], n_ws_weights)
-        else:
-            raise ValueError(method)
+    if method == "hmooc2":
+        per_c: Sequence[Tuple[np.ndarray, np.ndarray]] = \
+            _hmooc2_all(F_bank, idx_bank, n_ws_weights)
+    elif method == "hmooc1":
+        per_c = [_hmooc1_fixed_c(F_bank[c], idx_bank[c]) for c in range(N)]
+    else:
+        raise ValueError(method)
+    for c, (F, S) in enumerate(per_c):
         if F.shape[0]:
             fronts.append(F)
             tcs.append(np.tile(Uc[c], (F.shape[0], 1)))
@@ -359,7 +494,7 @@ def dag_aggregate(
     F = np.concatenate(fronts, 0)
     TC = np.concatenate(tcs, 0)
     SEL = np.concatenate(sels, 0)
-    mask = pareto_mask_np(F)
+    mask = pareto_mask_fast(F)
     keep = np.nonzero(mask)[0]
     theta_ps = pool[np.maximum(SEL[keep], 0)]   # (q, m, d_ps)
     return F[keep], TC[keep], theta_ps
@@ -378,17 +513,40 @@ def hmooc_solve(
     *,
     snap_c=None,
     snap_ps=None,
+    effective_set: Optional[EffectiveSet] = None,
 ) -> HMOOCResult:
-    """Compile-time fine-grained MOO (subQ tuning + DAG aggregation)."""
+    """Compile-time fine-grained MOO (subQ tuning + DAG aggregation).
+
+    ``effective_set`` reuses Algorithm 1 artifacts from a previous solve:
+    the candidate samples are always safe to share (they are
+    query-independent for a fixed config); if ``opt_idx`` banks are present
+    they are reused too, which skips the per-representative MOO entirely —
+    exact when the query is identical to the one they were computed on.
+    """
     t0 = time.perf_counter()
-    rng = np.random.default_rng(cfg.seed)
-    Uc, pool, F_bank, idx_bank, n_evals = subq_tuning(
-        stage_eval, m, d_c, d_ps, cfg, snap_c=snap_c, snap_ps=snap_ps,
-        rng=rng)
+    reused_banks = False
+    if effective_set is None:
+        rng = np.random.default_rng(cfg.seed)
+        eset = build_candidates(d_c, d_ps, cfg, snap_c=snap_c,
+                                snap_ps=snap_ps, rng=rng)
+    else:
+        eset = effective_set
+    n_evals = 0
+    if eset.opt_idx is not None and len(eset.opt_idx[0]) == m:
+        k_obj = eset.k_obj
+        reused_banks = True
+    else:
+        opt_idx, k_obj, n_evals = _optimize_rep_banks(stage_eval, m, eset,
+                                                      cfg)
+        eset = dataclasses.replace(eset, opt_idx=opt_idx, k_obj=k_obj)
+    F_bank, idx_bank, n2 = _assign_banks(stage_eval, m, eset, cfg, k_obj)
+    n_evals += n2
     front, theta_c, theta_ps = dag_aggregate(
-        Uc, pool, F_bank, idx_bank, cfg.dag_method,
+        eset.Uc, eset.pool, F_bank, idx_bank, cfg.dag_method,
         n_ws_weights=cfg.n_ws_weights)
     dt = time.perf_counter() - t0
     return HMOOCResult(front=front, theta_c=theta_c, theta_ps=theta_ps,
                        solve_time=dt, n_evals=n_evals,
-                       extras={"n_theta_c": float(Uc.shape[0])})
+                       extras={"n_theta_c": float(eset.Uc.shape[0]),
+                               "reused_banks": float(reused_banks)},
+                       effective_set=eset)

@@ -18,6 +18,7 @@ hypervolume computation used by the benchmarks.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -27,12 +28,34 @@ import numpy as np
 __all__ = [
     "pareto_mask",
     "pareto_mask_np",
+    "pareto_mask_fast",
     "kung_2d_np",
     "filter_dominated_np",
     "compact_bank",
     "hypervolume_2d",
     "hypervolume",
 ]
+
+@functools.lru_cache(maxsize=None)
+def backend() -> str:
+    # Resolved lazily: jax.default_backend() initializes the XLA runtime,
+    # which must not happen as an import side effect.
+    return jax.default_backend()
+
+
+# Row count above which dominance masks route to the Pallas kernel.  On TPU
+# the kernel wins early; on CPU hosts the interpret-mode kernel never beats
+# the O(n log n) numpy sweep, so the default keeps the numpy path (and its
+# float64 determinism) unless explicitly overridden.  None = resolve from
+# the env var / backend on first use (tests monkeypatch this directly).
+_KERNEL_MIN_N = None
+
+
+@functools.lru_cache(maxsize=None)
+def _default_kernel_min_n() -> int:
+    return int(os.environ.get(
+        "REPRO_PARETO_KERNEL_MIN_N",
+        "512" if backend() == "tpu" else str(1 << 30)))
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +173,43 @@ def _pareto_mask_2d_np(F: np.ndarray, valid: np.ndarray) -> np.ndarray:
     keep = (f1 == grp_min[grp]) & (f1 < prev_best[grp])
     mask[order[keep]] = True
     return mask
+
+
+def pareto_mask_fast(F: np.ndarray,
+                     valid: Optional[np.ndarray] = None) -> np.ndarray:
+    """Dominance mask dispatcher: Pallas kernel for large n, numpy below.
+
+    Same semantics as :func:`pareto_mask_np`.  Rows are bucket-padded to a
+    power of two before hitting the jitted kernel so the compile cache sees
+    only O(log n) distinct shapes across a serving session.  The kernel
+    compares in float32; the numpy fallback keeps float64 — callers that
+    need bit-stable fronts on CPU get them by default (see ``_KERNEL_MIN_N``).
+    """
+    F = np.asarray(F, np.float64)
+    n = F.shape[0]
+    thr = _KERNEL_MIN_N if _KERNEL_MIN_N is not None \
+        else _default_kernel_min_n()
+    if n < thr or n == 0:
+        return pareto_mask_np(F, valid)
+    return _pareto_mask_kernel(F, valid)
+
+
+def _pareto_mask_kernel(F: np.ndarray,
+                        valid: Optional[np.ndarray] = None) -> np.ndarray:
+    from ...kernels.pareto_filter import pareto_filter  # lazy: optional layer
+    n, k = F.shape
+    if valid is None:
+        v = np.isfinite(F).all(-1)
+    else:
+        v = np.asarray(valid, bool) & np.isfinite(F).all(-1)
+    bucket = max(128, 1 << int(np.ceil(np.log2(max(n, 2)))))
+    Fp = np.full((bucket, k), np.inf)
+    Fp[:n] = np.where(np.isfinite(F), F, np.inf)
+    vp = np.zeros(bucket, bool)
+    vp[:n] = v
+    mask = np.asarray(pareto_filter(jnp.asarray(Fp, jnp.float32),
+                                    jnp.asarray(vp)))
+    return mask[:n]
 
 
 def kung_2d_np(F: np.ndarray) -> np.ndarray:

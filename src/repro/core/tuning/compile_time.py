@@ -48,17 +48,33 @@ def compile_time_optimize(
     weights: Tuple[float, float] = (0.9, 0.1),
     cfg: HMOOCConfig = HMOOCConfig(),
     cost: CostModel = DEFAULT_COST,
+    cache=None,
 ) -> CompileTimeResult:
     """Solve the fine-grained compile-time MOO and pick a WUN recommendation.
 
     ``model=None`` uses the oracle (simulator-on-estimates) objective — used
     by algorithm studies; pass the trained subQ model for the paper pipeline.
+
+    ``cache`` is an optional effective-set cache (duck-typed, see
+    ``repro.serve.EffectiveSetCache``): ``cache.lookup(query, cfg, model,
+    cost)`` returns Algorithm 1 artifacts to reuse (or None) and
+    ``cache.store(query, cfg, eset, model, cost)`` records them after a
+    solve.  A lookup hit on an identical query skips Algorithm 1 entirely
+    and is bit-identical to a cold solve.
     """
     t0 = time.perf_counter()
     obj = StageObjectives(query, model=model, cost=cost)
+    eset = cache.lookup(query, cfg, model, cost) if cache is not None \
+        else None
     res: HMOOCResult = hmooc_solve(
         obj.stage_eval, obj.m, obj.d_c, obj.d_ps, cfg,
-        snap_c=obj.snap_c, snap_ps=obj.snap_ps)
+        snap_c=obj.snap_c, snap_ps=obj.snap_ps, effective_set=eset)
+    # Don't re-store after a bank-reuse solve: the stored fingerprint must
+    # stay that of the query the banks were actually computed from, else an
+    # approximate cross-variant reuse would later be served as an exact hit.
+    if (cache is not None and res.effective_set is not None
+            and not res.extras.get("reused_banks")):
+        cache.store(query, cfg, res.effective_set, model, cost)
     if res.front.shape[0] == 0:
         raise RuntimeError(f"HMOOC produced no solutions for {query.qid}")
     choice, _ = wun_select(res.front, np.asarray(weights))

@@ -40,9 +40,8 @@ def _kernel(F_i_ref, F_j_ref, vj_ref, dom_ref):
     Fj = F_j_ref[...]                     # (BJ, KPAD)
     vj = vj_ref[...]                      # (BJ, 1) f32 validity (1/0)
 
-    # Padded objective columns hold +inf for i and +inf for j, making the
-    # le comparison True only on real columns... instead we pad with equal
-    # sentinel values so they never affect all()/any(): both sides use +BIG.
+    # Padded objective columns hold the same value (0.0) on both sides, so
+    # they compare equal and never flip the all(<=)/any(<) outcome.
     le = (Fj[:, None, :] <= Fi[None, :, :]).all(-1)    # (BJ, BI)
     lt = (Fj[:, None, :] < Fi[None, :, :]).any(-1)     # (BJ, BI)
     dominates = le & lt & (vj > 0.5)                   # (BJ, BI)

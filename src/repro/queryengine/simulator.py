@@ -134,7 +134,7 @@ def decide_join(build_bytes: np.ndarray, probe_rows: np.ndarray,
 
 
 def _post_shuffle_parts(shuffle_bytes: np.ndarray, theta_p: np.ndarray,
-                        theta_s: np.ndarray, theta_c: np.ndarray,
+                        theta_s: np.ndarray,
                         aqe: bool) -> Tuple[np.ndarray, np.ndarray]:
     """Partition count after exchange (+ θs coalesce/rebalance at runtime).
 
@@ -240,7 +240,7 @@ def simulate_subq(
         probe_r = rr if bl <= br else rl
         shuffle_in = (bl + br) * compress_ratio
         parts, small_f = _post_shuffle_parts(
-            np.full(n, shuffle_in), theta_p, theta_s, theta_c, aqe)
+            np.full(n, shuffle_in), theta_p, theta_s, aqe)
         if join_algo is None:
             algo = decide_join(np.full(n, build_b), np.full(n, probe_r),
                                theta_p, parts)
@@ -295,7 +295,7 @@ def simulate_subq(
         B = float(inp[0])
         shuffle_in = B * compress_ratio
         parts, small_f = _post_shuffle_parts(
-            np.full(n, shuffle_in), theta_p, theta_s, theta_c, aqe)
+            np.full(n, shuffle_in), theta_p, theta_s, aqe)
         per_part = B / np.maximum(parts, 1.0)
         spill = np.where(per_part > task_mem, 1.0 + cost.spill_penalty, 1.0)
         cpu_sec = (B / GB) * (cost.c_shuffle_write * compress_cpu

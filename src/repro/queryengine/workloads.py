@@ -26,6 +26,7 @@ from .plan import Operator, Query, SubQ, cbo_estimate
 __all__ = [
     "Table", "TPCH_TABLES", "TPCDS_TABLES",
     "make_query", "make_benchmark", "parametric_variants", "default_workload",
+    "serving_stream",
 ]
 
 
@@ -279,6 +280,35 @@ def parametric_variants(benchmark: str, template: int, n: int, *,
     """Parametric training queries from one template (paper: 50k per bench)."""
     return [make_query(benchmark, template, variant=v, seed=seed)
             for v in range(start, start + n)]
+
+
+def serving_stream(benchmark: str, n: int, *, seed: int = 0,
+                   zipf_a: float = 1.3, n_variants: int = 3) -> List[Query]:
+    """A production-like stream of ``n`` tuning requests.
+
+    Template popularity is Zipf-distributed (rank weights ``1/r^a`` over a
+    seeded template permutation) and each request picks one of
+    ``n_variants`` parametric variants, variant 0 being the most common —
+    the repeated-template traffic shape that lets a serving-layer
+    effective-set cache amortize Algorithm 1.  Deterministic per seed.
+    """
+    n_t = 22 if benchmark == "tpch" else 102
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xC0FFEE]))
+    rank_of = rng.permutation(n_t)
+    p = 1.0 / (1.0 + np.arange(n_t, dtype=np.float64)) ** zipf_a
+    p /= p.sum()
+    # Variant distribution: geometric-ish, variant 0 dominant.
+    pv = 0.5 ** np.arange(n_variants, dtype=np.float64)
+    pv /= pv.sum()
+    out: List[Query] = []
+    built: Dict[Tuple[int, int], Query] = {}
+    for _ in range(n):
+        t = int(rank_of[rng.choice(n_t, p=p)])
+        v = int(rng.choice(n_variants, p=pv))
+        if (t, v) not in built:
+            built[(t, v)] = make_query(benchmark, t, variant=v, seed=0)
+        out.append(built[(t, v)])
+    return out
 
 
 def default_workload(benchmark: str, n_per_template: int = 4, *,

@@ -1,0 +1,13 @@
+"""Batched compile-time tuning service (multi-query HMOOC serving).
+
+Entry points:
+
+* :func:`tune_batch` — solve the compile-time MOO for a batch of queries.
+* :class:`TuningService` — long-lived server holding the effective-set
+  cache so repeated-template traffic skips Algorithm 1.
+* :class:`EffectiveSetCache` — the template-keyed cache itself.
+"""
+from .cache import EffectiveSetCache
+from .service import TuningService, tune_batch
+
+__all__ = ["EffectiveSetCache", "TuningService", "tune_batch"]

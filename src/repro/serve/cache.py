@@ -1,0 +1,117 @@
+"""Template-keyed effective-set cache for the tuning service.
+
+Algorithm 1's candidate sampling (LHS θc set, clustering, crossover
+enrichment, θp⊕θs pool) depends only on the parameter spaces and the
+:class:`~repro.core.moo.hmooc.HMOOCConfig` — never on the query — so those
+artifacts are shareable across *all* queries solved under one config.  The
+per-representative optimal-θp banks (``opt_idx``) are computed from one
+query's statistics; they are exact to reuse for an identical query (same
+template, same parametric variant → same CBO statistics) and a
+template-level approximation otherwise.
+
+Cache policy, per (benchmark, template, config, model) key:
+
+* **full hit** — stored fingerprint matches the incoming query: reuse
+  candidates *and* banks; the solve skips Algorithm 1 and is bit-identical
+  to a cold solve.
+* **structure hit** — same template, different parametric variant: reuse
+  the candidate samples, recompute banks (exact).  With
+  ``reuse_banks_across_variants=True`` the stored banks are reused instead
+  (approximate, amortized — the paper's repeated-template serving regime).
+* **miss** — first sight of the template: full solve, artifacts stored.
+
+Entries are LRU-evicted above ``max_entries``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.moo.hmooc import EffectiveSet, HMOOCConfig
+from ..queryengine.plan import Query
+
+__all__ = ["EffectiveSetCache", "query_fingerprint", "template_key"]
+
+
+def query_fingerprint(query: Query) -> int:
+    """Hash of the statistics the stage objectives read from a query."""
+    h = zlib.crc32(query.qid.encode())
+    for sq in query.subqs:
+        vals = np.asarray(
+            list(sq.est_input_rows) + list(sq.est_input_bytes)
+            + list(sq.input_rows) + list(sq.input_bytes)
+            + [sq.est_out_rows, sq.est_out_bytes, sq.out_rows, sq.out_bytes,
+               sq.cpu_weight, sq.skew, float(sq.depth)], np.float64)
+        h = zlib.crc32(vals.tobytes(), h)
+    return h
+
+
+def template_key(query: Query, cfg: HMOOCConfig, model, cost=None) -> Tuple:
+    # The banks depend on everything stage_eval reads: query statistics
+    # (fingerprinted separately), the objective model, and the cost model.
+    return (query.benchmark, query.template, cfg, cost,
+            id(model) if model is not None else None)
+
+
+@dataclasses.dataclass
+class _Entry:
+    eset: EffectiveSet
+    fingerprint: int
+    # Strong reference to the model the banks were computed under: the key
+    # uses id(model), which CPython may reuse after a model is collected —
+    # pinning the model keeps live entries' ids unique.
+    model: object = None
+
+
+class EffectiveSetCache:
+    """LRU cache of Algorithm 1 artifacts keyed by query template."""
+
+    def __init__(self, max_entries: int = 256, *,
+                 reuse_banks_across_variants: bool = False):
+        self.max_entries = max_entries
+        self.reuse_banks_across_variants = reuse_banks_across_variants
+        self._entries: "OrderedDict[Tuple, _Entry]" = OrderedDict()
+        self.hits = 0            # full hits (banks reused, exact)
+        self.approx_hits = 0     # banks reused across variants (approximate)
+        self.structure_hits = 0  # candidates reused, banks recomputed
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, query: Query, cfg: HMOOCConfig,
+               model=None, cost=None) -> Optional[EffectiveSet]:
+        key = template_key(query, cfg, model, cost)
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        if entry.fingerprint == query_fingerprint(query):
+            self.hits += 1
+            return entry.eset
+        if self.reuse_banks_across_variants:
+            self.approx_hits += 1
+            return entry.eset
+        self.structure_hits += 1
+        return entry.eset.without_banks()
+
+    def store(self, query: Query, cfg: HMOOCConfig, eset: EffectiveSet,
+              model=None, cost=None) -> None:
+        key = template_key(query, cfg, model, cost)
+        self._entries[key] = _Entry(eset=eset,
+                                    fingerprint=query_fingerprint(query),
+                                    model=model)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "approx_hits": self.approx_hits,
+                "structure_hits": self.structure_hits,
+                "misses": self.misses}

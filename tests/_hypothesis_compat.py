@@ -1,0 +1,107 @@
+"""Property-test shim: real ``hypothesis`` when installed, else a
+fixed-seed sweep.
+
+Usage (drop-in for the subset of the hypothesis API these tests use)::
+
+    from _hypothesis_compat import given, settings, st
+
+When the ``hypothesis`` package is available the real decorators are
+re-exported unchanged.  Otherwise ``@given`` turns the test into a
+deterministic sweep: ``max_examples`` (from the paired ``@settings``)
+example tuples are drawn from a per-test fixed-seed ``random.Random`` and
+the body runs once per tuple, so the suite still collects and exercises the
+same properties on a clean machine.
+"""
+
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 15
+
+    class _Strategy:
+        """A draw rule: ``sample(rnd: random.Random) -> value``."""
+
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+        @staticmethod
+        def randoms(use_true_random=False):
+            del use_true_random  # fallback is always seeded
+            return _Strategy(lambda r: random.Random(r.randint(0, 2 ** 63)))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10, unique=False):
+            def sample(r):
+                size = r.randint(min_size, max_size)
+                out = []
+                for _ in range(size * 5):
+                    if len(out) >= size:
+                        break
+                    v = elements.sample(r)
+                    if unique and v in out:
+                        continue
+                    out.append(v)
+                return out
+
+            return _Strategy(sample)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NB: no functools.wraps — pytest must see a zero-argument
+            # signature, not the wrapped function's strategy parameters
+            # (it would try to resolve them as fixtures).
+            def wrapper():
+                n = getattr(wrapper, "_fallback_max_examples",
+                            _DEFAULT_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for ex in range(n):
+                    rnd = random.Random(seed * 1000003 + ex)
+                    vals = [s.sample(rnd) for s in strategies]
+                    try:
+                        fn(*vals)
+                    except BaseException:
+                        print(f"Falsifying fallback example "
+                              f"{fn.__name__}[{ex}]: {vals!r}")
+                        raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -1,0 +1,49 @@
+"""Suite-wide fixtures and speedups.
+
+* Smoke-model build caching: many tests rebuild the same smoke
+  ``ArchConfig`` / ``ModelApi`` (both pure, stateless factories).  The
+  registry functions are wrapped with session-lifetime memo tables here —
+  conftest imports before any test module, so ``from repro.archs.registry
+  import build_model`` inside tests binds the cached versions.
+* ``slow`` marker: long-running end-to-end tests are excluded from tier-1
+  by default (see pytest.ini ``addopts``); run them with ``-m slow``.
+"""
+from typing import Dict
+
+import pytest
+
+from repro.archs import registry as _registry
+
+_orig_get_smoke_config = _registry.get_smoke_config
+_orig_build_model = _registry.build_model
+
+_cfg_cache: Dict[tuple, object] = {}
+_model_cache: Dict[str, object] = {}
+
+
+def _cached_get_smoke_config(arch_id, **overrides):
+    key = (arch_id, tuple(sorted(overrides.items())))
+    if key not in _cfg_cache:
+        _cfg_cache[key] = _orig_get_smoke_config(arch_id, **overrides)
+    return _cfg_cache[key]
+
+
+def _cached_build_model(cfg):
+    key = repr(cfg)
+    if key not in _model_cache:
+        _model_cache[key] = _orig_build_model(cfg)
+    return _model_cache[key]
+
+
+_registry.get_smoke_config = _cached_get_smoke_config
+_registry.build_model = _cached_build_model
+
+
+@pytest.fixture(scope="session")
+def smoke_model_factory():
+    """(arch_id, **overrides) -> (cfg, api), memoized for the session."""
+    def factory(arch_id, **overrides):
+        cfg = _cached_get_smoke_config(arch_id, **overrides)
+        return cfg, _cached_build_model(cfg)
+
+    return factory

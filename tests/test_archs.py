@@ -9,6 +9,13 @@ from repro.archs.registry import (ARCH_IDS, build_model, get_config,
                                   get_smoke_config)
 
 
+# The heaviest smoke configs (compile-dominated) run only with -m slow;
+# every model family keeps at least one tier-1 representative.
+_SLOW_ARCHS = {"jamba-1.5-large-398b", "whisper-base", "minicpm-2b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+               else a for a in ARCH_IDS]
+
+
 def _batch(cfg, B, S, rng):
     tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
     batch = {"tokens": tokens, "labels": tokens}
@@ -21,7 +28,7 @@ def _batch(cfg, B, S, rng):
     return batch
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_smoke_forward_and_train_step(arch_id):
     """Reduced config: one forward + one train step, shapes + no NaNs."""
     cfg = get_smoke_config(arch_id).with_(dtype="float32")
@@ -42,7 +49,7 @@ def test_smoke_forward_and_train_step(arch_id):
     assert np.isfinite(gnorm) and gnorm > 0
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_prefill_decode_matches_forward(arch_id):
     cfg = get_smoke_config(arch_id).with_(dtype="float32")
     if cfg.n_experts:

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.archs.common import param_specs
 from repro.archs.registry import build_model, get_smoke_config
@@ -60,6 +60,7 @@ def test_pure_dp_specs_have_no_model_axis():
             assert "model" not in axes or "data" in axes  # only via fsdp pair
 
 
+@pytest.mark.slow
 def test_windowed_decode_rolls():
     cfg = get_smoke_config("jamba-1.5-large-398b").with_(
         dtype="float32", window=8)
@@ -92,6 +93,7 @@ def test_step_adapter_recommends_and_hysteresis():
     assert ad.recommend() is None
 
 
+@pytest.mark.slow
 def test_rwkv_chunked_grad_matches_scan():
     cfg_s = get_smoke_config("rwkv6-1.6b").with_(dtype="float32",
                                                  rwkv_impl="scan")

@@ -35,6 +35,7 @@ def test_lap_pe_deterministic_and_orthogonalish():
     assert np.isfinite(p1).all()
 
 
+@pytest.mark.slow
 def test_model_trains_and_roundtrips(tmp_path, traces):
     ds, cfg = build_dataset(traces, "subq")
     m = train_model(ds, cfg, steps=150, batch=256, seed=0)

@@ -1,7 +1,7 @@
 """Property tests for Pareto primitives (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.moo.pareto import (hypervolume_2d, kung_2d_np, pareto_mask,
                                    pareto_mask_np)

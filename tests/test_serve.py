@@ -1,0 +1,187 @@
+"""Batched tuning service: bit-match vs sequential, kernel routing parity,
+effective-set cache exactness."""
+import numpy as np
+import pytest
+
+from repro.core.moo import hmooc, pareto
+from repro.core.moo.hmooc import (HMOOCConfig, _pareto_bank, build_candidates,
+                                  dag_aggregate, hmooc_solve)
+from repro.core.moo.pareto import pareto_mask_fast, pareto_mask_np
+from repro.core.tuning.compile_time import compile_time_optimize
+from repro.queryengine.workloads import make_benchmark, serving_stream
+from repro.serve import EffectiveSetCache, TuningService, tune_batch
+from repro.serve.cache import query_fingerprint
+
+CFG = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48, n_c_enrich=12,
+                  max_bank=12, seed=3)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    qs = make_benchmark("tpch")
+    return [qs[1], qs[5], qs[8]]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: batched service
+# ---------------------------------------------------------------------------
+
+def test_tune_batch_bitmatches_sequential(queries):
+    batch = tune_batch(queries, (0.9, 0.1), CFG)
+    for q, got in zip(queries, batch):
+        ref = compile_time_optimize(q, weights=(0.9, 0.1), cfg=CFG)
+        np.testing.assert_array_equal(got.front, ref.front)
+        assert got.choice == ref.choice
+        np.testing.assert_array_equal(got.theta_c, ref.theta_c)
+        np.testing.assert_array_equal(got.theta_p_sub, ref.theta_p_sub)
+        np.testing.assert_array_equal(got.theta_s_sub, ref.theta_s_sub)
+        np.testing.assert_array_equal(got.theta_p0, ref.theta_p0)
+        np.testing.assert_array_equal(got.theta_s0, ref.theta_s0)
+
+
+def test_tune_batch_dedupes_identical_requests(queries):
+    q = queries[0]
+    svc = TuningService(cfg=CFG)
+    res = svc.tune_batch([q, q, q, queries[1]])
+    assert svc.last_batch.n_solved == 2
+    assert svc.last_batch.n_deduped == 2
+    np.testing.assert_array_equal(res[0].front, res[2].front)
+
+
+def test_tune_batch_per_query_weights(queries):
+    q = queries[2]
+    res = tune_batch([q, q], [(1.0, 0.0), (0.0, 1.0)], CFG, dedupe=True)
+    # Same front, potentially different WUN picks; latency-weighted choice
+    # must not be slower than the cost-weighted one.
+    np.testing.assert_array_equal(res[0].front, res[1].front)
+    assert res[0].chosen_objectives[0] <= res[1].chosen_objectives[0]
+
+
+def test_effective_set_cache_hit_identical_theta(queries):
+    q = queries[0]
+    # dedupe=False bypasses the response cache so the warm request
+    # exercises the effective-set reuse path end to end.
+    svc = TuningService(cfg=CFG, dedupe=False)
+    cold = svc.tune_batch([q])[0]
+    assert svc.cache.stats()["misses"] == 1
+    warm = svc.tune_batch([q])[0]
+    assert svc.cache.stats()["hits"] >= 1
+    np.testing.assert_array_equal(cold.front, warm.front)
+    np.testing.assert_array_equal(cold.theta_c, warm.theta_c)
+    np.testing.assert_array_equal(cold.theta_p_sub, warm.theta_p_sub)
+    np.testing.assert_array_equal(cold.theta_s_sub, warm.theta_s_sub)
+    # The warm solve skipped Algorithm 1's representative MOO.
+    assert warm.n_evals < cold.n_evals
+
+
+def test_cache_structure_hit_is_exact():
+    from repro.queryengine.workloads import make_query
+    q_v1 = make_query("tpch", 3, variant=1)
+    q_v2 = make_query("tpch", 3, variant=2)
+    svc = TuningService(cfg=CFG)
+    svc.tune_batch([q_v1])
+    got = svc.tune_batch([q_v2])[0]
+    assert svc.cache.stats()["structure_hits"] == 1
+    ref = compile_time_optimize(q_v2, cfg=CFG)
+    np.testing.assert_array_equal(got.front, ref.front)
+    np.testing.assert_array_equal(got.theta_c, ref.theta_c)
+
+
+def test_candidates_are_query_independent():
+    e1 = build_candidates(4, 6, CFG)
+    e2 = build_candidates(4, 6, CFG)
+    np.testing.assert_array_equal(e1.Uc, e2.Uc)
+    np.testing.assert_array_equal(e1.labels, e2.labels)
+    np.testing.assert_array_equal(e1.pool, e2.pool)
+
+
+def test_fingerprint_distinguishes_variants():
+    from repro.queryengine.workloads import make_query
+    a = make_query("tpch", 3, variant=1)
+    b = make_query("tpch", 3, variant=2)
+    c = make_query("tpch", 3, variant=1)
+    assert query_fingerprint(a) != query_fingerprint(b)
+    assert query_fingerprint(a) == query_fingerprint(c)
+
+
+def test_serving_stream_deterministic_and_repeats():
+    s1 = serving_stream("tpch", 24, seed=5)
+    s2 = serving_stream("tpch", 24, seed=5)
+    assert [q.qid for q in s1] == [q.qid for q in s2]
+    assert len({q.qid for q in s1}) < len(s1)   # traffic repeats templates
+
+
+# ---------------------------------------------------------------------------
+# Kernel routing parity (Pallas pareto_filter / ws_reduce vs numpy)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def force_kernels(monkeypatch):
+    monkeypatch.setattr(pareto, "_KERNEL_MIN_N", 0)
+    monkeypatch.setattr(hmooc, "_WS_MIN_SCORES", 0)
+
+
+def _f32_bank(rng, shape, scale=10.0):
+    # float32-representable values: the kernel's f32 comparisons are then
+    # exact, so masks must match the float64 numpy path bit-for-bit.
+    return (rng.random(shape) * scale).astype(np.float32).astype(np.float64)
+
+
+def test_pareto_mask_fast_kernel_matches_numpy(force_kernels):
+    rng = np.random.default_rng(0)
+    for n, k in [(1, 2), (5, 3), (64, 2), (200, 3), (513, 4)]:
+        F = _f32_bank(rng, (n, k))
+        F[rng.random(n) < 0.15] = np.inf          # all-inf rows
+        assert (pareto_mask_fast(F) == pareto_mask_np(F)).all()
+
+
+def test_pareto_bank_kernel_matches_numpy_with_cap(monkeypatch):
+    rng = np.random.default_rng(1)
+    f0 = np.sort(rng.random(100))
+    F = np.stack([f0, 1.0 - f0], -1)              # 100 mutually nondominated
+    monkeypatch.setattr(pareto, "_KERNEL_MIN_N", 0)
+    idx_kernel = _pareto_bank(F, 16)
+    monkeypatch.setattr(pareto, "_KERNEL_MIN_N", 1 << 30)
+    idx_numpy = _pareto_bank(F, 16)
+    assert idx_kernel.size == 16                  # cap applied
+    np.testing.assert_array_equal(idx_kernel, idx_numpy)
+
+
+@pytest.mark.parametrize("method", ["hmooc1", "hmooc2", "hmooc3"])
+def test_dag_aggregate_kernel_matches_numpy(method, force_kernels,
+                                            monkeypatch):
+    rng = np.random.default_rng(2)
+    N, m, B, k = 6, 3, 8, 2
+    Fb = _f32_bank(rng, (N, m, B, k))
+    Fb[0, 1] = np.inf                             # a subQ with an empty bank
+    Fb[3, :, 5:] = np.inf                         # partially padded banks
+    Ib = np.tile(np.arange(B), (N, m, 1))
+    Uc = rng.random((N, 3))
+    pool = rng.random((B, 4))
+    got = dag_aggregate(Uc, pool, Fb, Ib, method)
+    monkeypatch.setattr(pareto, "_KERNEL_MIN_N", 1 << 30)
+    monkeypatch.setattr(hmooc, "_WS_MIN_SCORES", 1 << 60)
+    ref = dag_aggregate(Uc, pool, Fb, Ib, method)
+    for a, b in zip(got, ref):
+        a2 = np.sort(a.reshape(a.shape[0], -1), axis=0)
+        b2 = np.sort(b.reshape(b.shape[0], -1), axis=0)
+        assert a2.shape == b2.shape
+        np.testing.assert_allclose(a2, b2, atol=1e-6)
+
+
+def test_hmooc_solve_kernel_path_front_matches(force_kernels, monkeypatch):
+    def stage_eval(i, Tc, Tps):
+        base = 1.0 + i
+        f1 = base * ((1 - Tps[:, 0]) ** 2 + 0.1) / (0.2 + Tc[:, 0])
+        f2 = base * (0.1 + Tc[:, 0]) * (0.5 + Tps[:, 0])
+        out = np.stack([f1, f2], -1)
+        return out.astype(np.float32).astype(np.float64)
+
+    cfg = HMOOCConfig(n_c_init=12, n_clusters=3, n_p_pool=32, n_c_enrich=8,
+                      max_bank=8, seed=1)
+    kernel = hmooc_solve(stage_eval, m=3, d_c=2, d_ps=2, cfg=cfg)
+    monkeypatch.setattr(pareto, "_KERNEL_MIN_N", 1 << 30)
+    monkeypatch.setattr(hmooc, "_WS_MIN_SCORES", 1 << 60)
+    ref = hmooc_solve(stage_eval, m=3, d_c=2, d_ps=2, cfg=cfg)
+    np.testing.assert_allclose(np.sort(kernel.front, 0),
+                               np.sort(ref.front, 0), atol=1e-6)

@@ -1,7 +1,7 @@
 """Simulator + workload + AQE invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.tuning.spark_space import (theta_c_space, theta_p_space,
                                            theta_s_space)

@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.archs.registry import build_model, get_smoke_config
 from repro.data.pipeline import data_iterator, make_batch
@@ -45,6 +45,7 @@ def test_train_loss_decreases(setup):
     assert all(np.isfinite(l) for l in losses)
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence(setup):
     """accum=2 must give (numerically) the same update as accum=1."""
     cfg, api, mesh = setup
