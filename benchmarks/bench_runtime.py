@@ -1,0 +1,163 @@
+"""Runtime re-optimization serving benchmark (§5.2 at scale).
+
+Measures, on the oracle backend (no trained model needed), the AQE-triggered
+θp/θs re-tuning of a batch of concurrent queries:
+
+* ``loop``  — the per-query path: ``make_runtime_optimizers`` +
+  ``run_with_aqe`` for each query in sequence (synchronous callbacks).
+* ``batch`` — ``repro.serve.RuntimeSession.run_batch``: the same queries
+  driven through the request/response protocol with cross-query fusion
+  (one stage-core / model call per fusion group per round, fused
+  realization, shared candidate pools).
+
+Also verifies per-query outputs are bit-identical between the two paths
+(θ_eff, final joins, request counts, simulated latency/IO/cost).
+
+Run:  PYTHONPATH=src python benchmarks/bench_runtime.py
+      PYTHONPATH=src python benchmarks/bench_runtime.py --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.moo.hmooc import HMOOCConfig
+from repro.core.tuning.runtime import make_runtime_optimizers
+from repro.queryengine.aqe import AQEResult, run_with_aqe
+from repro.queryengine.workloads import serving_stream
+from repro.serve import RuntimeSession, TuningService
+
+try:
+    from .common import save_bench
+except ImportError:          # standalone: python benchmarks/bench_runtime.py
+    from common import save_bench
+
+WEIGHTS = (0.9, 0.1)
+
+
+def _loop(queries, compiled, n_candidates: int,
+          seed: int) -> List[AQEResult]:
+    out = []
+    for q, ct in zip(queries, compiled):
+        lqp_o, qs_o = make_runtime_optimizers(
+            q, ct.theta_c, seed_theta_p=ct.theta_p_sub,
+            seed_theta_s=ct.theta_s_sub, weights=WEIGHTS,
+            n_candidates=n_candidates, seed=seed)
+        out.append(run_with_aqe(q, ct.theta_c, ct.theta_p0, ct.theta_s0,
+                                lqp_optimizer=lqp_o, qs_optimizer=qs_o))
+    return out
+
+
+def _identical(a: List[AQEResult], b: List[AQEResult]) -> bool:
+    for x, y in zip(a, b):
+        for f, g in ((x.theta_p_eff, y.theta_p_eff),
+                     (x.theta_s_eff, y.theta_s_eff),
+                     (x.final_join, y.final_join),
+                     (x.sim.ana_latency, y.sim.ana_latency),
+                     (x.sim.actual_latency, y.sim.actual_latency),
+                     (x.sim.io_gb, y.sim.io_gb),
+                     (x.sim.cost, y.sim.cost)):
+            if not np.array_equal(f, g):
+                return False
+        if (x.requests_sent, x.requests_total) != (y.requests_sent,
+                                                   y.requests_total):
+            return False
+    return True
+
+
+def run(bench: str = "tpch", n_queries: int = 32, n_candidates: int = 64,
+        repeats: int = 5, seed: int = 0) -> dict:
+    queries = serving_stream(bench, n_queries, seed=seed)
+    svc = TuningService(cfg=HMOOCConfig(seed=seed))
+    t0 = time.perf_counter()
+    compiled = svc.tune_batch(queries, WEIGHTS)
+    t_compile = time.perf_counter() - t0
+
+    # Correctness first: the fused session must bit-match the loop.
+    loop_res = _loop(queries, compiled, n_candidates, seed)
+    sess = RuntimeSession(weights=WEIGHTS, n_candidates=n_candidates,
+                          seed=seed)
+    batch_res = sess.run_batch(queries, compiled)
+    identical = _identical(loop_res, batch_res)
+
+    t_loop = min(_timed(
+        lambda: _loop(queries, compiled, n_candidates, seed), repeats))
+    t_batch = min(_timed(
+        lambda: RuntimeSession(weights=WEIGHTS, n_candidates=n_candidates,
+                               seed=seed).run_batch(queries, compiled),
+        repeats))
+
+    req_sent = sum(r.requests_sent for r in batch_res)
+    req_total = sum(r.requests_total for r in batch_res)
+    st = sess.last_batch
+    return {
+        "bench": bench,
+        "n_queries": n_queries,
+        "n_candidates": n_candidates,
+        "compile_batch_s": t_compile,
+        "requests_sent": req_sent,
+        "requests_total": req_total,
+        "prune_rate": 1.0 - req_sent / req_total,
+        "outputs_identical": identical,
+        "loop_s": t_loop,
+        "batch_s": t_batch,
+        "loop_rps": req_sent / t_loop,
+        "batch_rps": req_sent / t_batch,
+        "loop_qps": n_queries / t_loop,
+        "batch_qps": n_queries / t_batch,
+        "speedup_batch_vs_loop": t_loop / t_batch,
+        "mean_query_latency_s": float(np.mean(
+            [r.sim.actual_latency[0] for r in batch_res])),
+        "session": {"rounds": st.rounds, "fused_calls": st.fused_calls},
+    }
+
+
+def _timed(fn, repeats: int) -> List[float]:
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="tpch", choices=["tpch", "tpcds"])
+    ap.add_argument("--n-queries", type=int, default=32)
+    ap.add_argument("--n-candidates", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI; checks correctness, skips "
+                         "artifact write")
+    args = ap.parse_args()
+
+    if args.smoke:
+        res = run(args.bench, n_queries=6, n_candidates=16, repeats=1,
+                  seed=args.seed)
+        print(json.dumps(res, indent=2))
+        if not res["outputs_identical"]:
+            raise SystemExit("batched runtime outputs diverge from the "
+                             "per-query loop")
+        print("smoke ok")
+        return
+
+    res = run(args.bench, args.n_queries, args.n_candidates, args.repeats,
+              args.seed)
+    print(json.dumps(res, indent=2))
+    print(f"\nloop: {res['loop_rps']:.0f} req/s | "
+          f"batch: {res['batch_rps']:.0f} req/s "
+          f"({res['speedup_batch_vs_loop']:.1f}x) | "
+          f"prune rate {res['prune_rate']:.2f} | "
+          f"identical: {res['outputs_identical']}")
+    for p in save_bench("runtime", res, headline=True):
+        print(f"wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

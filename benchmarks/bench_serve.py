@@ -15,7 +15,9 @@ Also verifies, for every benchmark query, that the batched service returns
 exactly the same Pareto front (same points, any order) as the sequential
 solver.
 
-Run:  PYTHONPATH=src python benchmarks/bench_serve.py --out BENCH_serve.json
+Run:  PYTHONPATH=src python benchmarks/bench_serve.py
+(artifacts: results/bench/serve.json + the BENCH_serve.json headline
+mirror, both written by benchmarks.common.save_bench)
 """
 from __future__ import annotations
 
@@ -35,6 +37,11 @@ from repro.core.tuning.compile_time import compile_time_optimize
 from repro.core.tuning.objectives import StageObjectives
 from repro.queryengine.workloads import make_benchmark, serving_stream
 from repro.serve import TuningService
+
+try:
+    from .common import save_bench
+except ImportError:          # standalone: python benchmarks/bench_serve.py
+    from common import save_bench
 
 
 # ---------------------------------------------------------------------------
@@ -194,7 +201,6 @@ def main():
     ap.add_argument("--batch-sizes", type=int, nargs="+", default=[1, 8, 32])
     ap.add_argument("--stream-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     cfg = HMOOCConfig(seed=args.seed)
@@ -208,10 +214,8 @@ def main():
           f"({res['speedup_batch_top_vs_legacy']:.1f}x vs legacy) | "
           f"fronts identical: {res['fronts_identical']} | "
           f"max solve {res['max_single_solve_ms']:.0f} ms")
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(res, f, indent=2)
-        print(f"wrote {args.out}")
+    for p in save_bench("serve", res, headline=True):
+        print(f"wrote {p}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@ repeated benchmark runs (and the end-to-end evaluation) reuse them.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Dict, Optional, Tuple
@@ -29,6 +30,27 @@ def results_dir(*parts: str) -> str:
     d = os.path.join(RESULTS, *parts)
     os.makedirs(d, exist_ok=True)
     return d
+
+
+REPO_ROOT = os.path.dirname(RESULTS)
+
+
+def save_bench(name: str, payload, *, headline: bool = False) -> list:
+    """Single writer for benchmark artifacts.
+
+    Canonical path is ``results/bench/<name>.json`` (what ``benchmarks.run``
+    and the standalone scripts both use).  ``headline=True`` additionally
+    mirrors the payload to ``BENCH_<name>.json`` at the repo root — a
+    generated copy for README links, produced by this one code path so the
+    two files cannot drift.
+    """
+    paths = [os.path.join(results_dir("bench"), f"{name}.json")]
+    if headline:
+        paths.append(os.path.join(REPO_ROOT, f"BENCH_{name}.json"))
+    for p in paths:
+        with open(p, "w") as f:
+            json.dump(payload, f, indent=2, default=str)
+    return paths
 
 
 _TRACE_CACHE: Dict[str, TraceSet] = {}

@@ -15,6 +15,7 @@ Benchmarks → paper artifacts:
   adaptability      Table 5      preference sweep vs SO-FW
   pruning           §5.2         runtime-request pruning rates
   serve             (ours)       batched tuning-service throughput
+  runtime           (ours)       batched runtime re-optimization service
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -22,13 +23,11 @@ Benchmarks → paper artifacts:
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import sys
 import time
 from typing import Callable, Dict, List
 
-from .common import results_dir
+from .common import save_bench
 
 
 def _print_rows(name: str, rows: List[dict]) -> None:
@@ -57,7 +56,7 @@ def main() -> None:
     nq = None if args.full else 10
 
     from . import bench_cluster, bench_end_to_end, bench_models, bench_moo, \
-        bench_roofline, bench_serve
+        bench_roofline, bench_runtime, bench_serve
     from repro.core.moo.hmooc import HMOOCConfig
 
     registry: Dict[str, Callable[[], List[dict]]] = {
@@ -91,13 +90,14 @@ def main() -> None:
         "serve": lambda: [bench_serve.run(
             b, HMOOCConfig(), [1, 8, 32], stream_len=64, seed=0)
             for b in benches],
+        "runtime": lambda: [bench_runtime.run(
+            b, n_queries=32 if args.full else 16) for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,
         "kernels": bench_cluster.run_kernels,
     }
 
     only = args.only.split(",") if args.only else list(registry)
-    out_dir = results_dir("bench")
     summary = {}
     for name in only:
         if name not in registry:
@@ -111,8 +111,7 @@ def main() -> None:
             summary[name] = "failed"
             continue
         _print_rows(name, rows)
-        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
-            json.dump(rows, f, indent=1, default=str)
+        save_bench(name, rows)
         summary[name] = f"{len(rows)} rows, {time.time()-t0:.0f}s"
     print("\n=== summary ===")
     for k, v in summary.items():

@@ -140,12 +140,19 @@ class PerfModel:
 
     def predict(self, emb: np.ndarray, theta: np.ndarray,
                 nond: np.ndarray) -> np.ndarray:
-        """(n, θd) unit θ + (n, 12) or (12,) nondecision → (n, 2) raw targets."""
+        """(n, θd) unit θ + (n, 12) or (12,) nondecision → (n, 2) raw targets.
+
+        ``emb`` is one cached embedding (d,) broadcast over the rows, or a
+        per-row (n, d) stack — the serving layer fuses re-scoring requests
+        from different (query, stage) pairs into one call this way.
+        """
         theta = np.asarray(theta, np.float32)
         n = theta.shape[0]
         if nond.ndim == 1:
             nond = np.broadcast_to(nond, (n, nond.shape[0]))
-        embb = np.broadcast_to(np.asarray(emb, np.float32), (n, emb.shape[0]))
+        emb = np.asarray(emb, np.float32)
+        embb = emb if emb.ndim == 2 \
+            else np.broadcast_to(emb, (n, emb.shape[0]))
         z = self._head(self.params, embb, theta,
                        np.asarray(nond, np.float32))
         return self.from_z(np.asarray(z))

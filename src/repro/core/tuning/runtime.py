@@ -9,32 +9,312 @@ design where the server runs model inference + MOO per request.
 
 Backends:
   * oracle — simulate the stage on true inputs (used for algorithm studies);
-  * model  — the trained runtime QS model (θp dropped; θc ⊕ θs decision) and
-    the subQ model re-evaluated with true statistics for θp choices.
+  * model  — θp decisions (L̄QP requests) re-score the subQ model with true
+    statistics; θs decisions (QS requests) use the runtime QS model (θp
+    dropped; θc ⊕ θs decision).
+
+The scoring path is request-shaped so a serving layer can fuse it across
+queries: :func:`score_requests` stacks same-kind oracle requests into one
+:func:`~repro.queryengine.simulator.simulate_stage_rows` call and same-model
+requests into one :meth:`PerfModel.predict` call, and
+:func:`weighted_pick_batch` resolves every pick through the Pareto /
+weighted-sum kernels.  :func:`make_runtime_optimizers` drives the identical
+code with single-request batches, so per-query and fused serving results
+match bit-for-bit on the oracle backend.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ...queryengine.plan import Query, SubQ
-from ...queryengine.simulator import CostModel, DEFAULT_COST, simulate_subq
+from ...queryengine.simulator import (CostModel, DEFAULT_COST, StageStats,
+                                      simulate_stage_rows, stage_stats_batch)
 from ...queryengine.trace import _alpha_stats
 from ..models.perf_model import PerfModel, make_nondecision
+from ..moo import hmooc as _hmooc
+from ..moo import pareto as _pareto
+from ..moo.pareto import pareto_mask_fast
 from .objectives import resource_rate
-from .spark_space import theta_p_space, theta_s_space
+from .spark_space import theta_c_space, theta_p_space, theta_s_space
 
-__all__ = ["make_runtime_optimizers"]
+__all__ = ["RuntimeOptimizerBackend", "ScoreRequest", "score_requests",
+           "weighted_pick_batch", "sample_candidate_pools", "fusion_key",
+           "make_runtime_optimizers"]
 
 
-def _weighted_pick(F: np.ndarray, weights: Tuple[float, float]) -> int:
-    lo, hi = F.min(0), F.max(0)
-    span = np.where(hi > lo, hi - lo, 1.0)
-    Fn = (F - lo) / span
+def fusion_key(rq: "ScoreRequest") -> tuple:
+    """Group key under which :func:`score_requests` fuses a request."""
+    model = rq.backend.model_for(rq.decision)
+    if model is not None:
+        return ("model", rq.decision, id(model))
+    return ("oracle", rq.subq.kind, id(rq.backend.cost))
+
+
+def sample_candidate_pools(seed: int, n_candidates: int
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """One LHS draw of the runtime θp/θs candidate pools.
+
+    Query-independent (the pools only depend on the parameter spaces), so a
+    serving session shares one draw across every concurrent query — exactly
+    the arrays a standalone per-query backend would draw for the same seed.
+    """
+    ps, ss = theta_p_space(), theta_s_space()
+    rng = np.random.default_rng(seed)
+    pool_p = ps.to_raw(ps.sample_lhs(rng, n_candidates))
+    pool_s = ss.to_raw(ss.sample_lhs(rng, n_candidates))
+    return pool_p, pool_s
+
+
+def weighted_pick_batch(Fs: Sequence[np.ndarray],
+                        weights: Tuple[float, float]) -> List[int]:
+    """Weighted-best row index per candidate objective set.
+
+    Per set: dominated rows are dropped (``pareto_mask_fast`` — the Pallas
+    ``pareto_filter`` kernel above ``REPRO_PARETO_KERNEL_MIN_N``), all rows
+    are min-max normalized over the full set, and the weighted-sum argmin
+    over the survivors routes through the ``ws_reduce`` kernel when the
+    fused score volume (sets × bank) clears ``REPRO_WS_KERNEL_MIN_SCORES``
+    (float64 numpy below) — the same env-gated thresholds as the
+    compile-time solver.  Single-request and fused serving calls share
+    this code, so on the numpy routing (the CPU default) their picks are
+    identical; above the kernel thresholds the fused call may score in
+    float32 while a lone request stays on numpy, the same f32-vs-f64
+    caveat the compile-time kernel routing documents.
+    """
+    R = len(Fs)
+    if R == 0:
+        return []
     w = np.asarray(weights, np.float64)
-    return int(np.argmin((Fn * w).sum(-1)))
+    # Dominance prefiltering only pays when the set is large enough to hit
+    # the Pallas kernel; below the threshold the weighted argmin alone is
+    # already exact (a dominated row cannot win the weighted sum).
+    thr = _pareto._KERNEL_MIN_N if _pareto._KERNEL_MIN_N is not None \
+        else _pareto._default_kernel_min_n()
+    kept: List[np.ndarray] = []
+    Fn_kept: List[np.ndarray] = []
+    for F in Fs:
+        F = np.asarray(F, np.float64)
+        lo, hi = F.min(0), F.max(0)
+        span = np.where(hi > lo, hi - lo, 1.0)
+        if F.shape[0] >= thr:
+            keep = np.nonzero(pareto_mask_fast(F))[0]
+            if keep.size == 0:
+                keep = np.arange(F.shape[0])
+        else:
+            keep = np.arange(F.shape[0])
+        kept.append(keep)
+        Fn_kept.append((F[keep] - lo) / span)
+    k = Fn_kept[0].shape[1]
+    B = max(f.shape[0] for f in Fn_kept)
+    Fb = np.full((R, B, k), 1e18)
+    for r, f in enumerate(Fn_kept):
+        Fb[r, :f.shape[0]] = f
+    if R * B >= _hmooc._ws_min_scores():
+        from ...kernels.ws_reduce import ws_reduce  # lazy: optional layer
+        _, idx = ws_reduce(Fb, w[None, :])           # (1, R)
+        j = np.asarray(idx, int)[0]
+    else:
+        j = np.argmin((Fb * w).sum(-1), axis=-1)
+    return [int(kept[r][j[r]]) for r in range(R)]
+
+
+class RuntimeOptimizerBackend:
+    """Per-query runtime re-optimization state: pools, seeds, scoring."""
+
+    def __init__(
+        self,
+        query: Query,
+        theta_c_raw: np.ndarray,
+        *,
+        seed_theta_p: Optional[np.ndarray] = None,   # (m, 9) compile seeds
+        seed_theta_s: Optional[np.ndarray] = None,   # (m, 2)
+        model_subq: Optional[PerfModel] = None,
+        model_qs: Optional[PerfModel] = None,
+        weights: Tuple[float, float] = (0.9, 0.1),
+        n_candidates: int = 64,
+        cost: CostModel = DEFAULT_COST,
+        seed: int = 0,
+        pools: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    ):
+        self.query = query
+        self.cost = cost
+        self.weights = weights
+        self.model_subq = model_subq
+        self.model_qs = model_qs
+        self.seed_theta_p = seed_theta_p
+        self.seed_theta_s = seed_theta_s
+        self.cs, self.ps, self.ss = (theta_c_space(), theta_p_space(),
+                                     theta_s_space())
+        self.tc_row = np.asarray(theta_c_raw, np.float64).reshape(1, -1)
+        self.tc_unit = self.cs.to_unit(self.tc_row)[0]
+        self.rate = resource_rate(self.tc_row, cost)[0]
+        # Candidate pools are fixed per query (one LHS draw), plus per-stage
+        # compile-time seeds — the runtime MOO just rescores them on true
+        # stats.  ``pools`` lets a serving session share the draw.
+        if pools is None:
+            pools = sample_candidate_pools(seed, n_candidates)
+        self.pool_p, self.pool_s = pools
+
+    # -- candidate sets ------------------------------------------------------
+    def lqp_candidates(self, subq: SubQ, theta_p_cur: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """θp candidates for an L̄QP request (θs pinned to the stage seed)."""
+        cands = [self.pool_p, theta_p_cur[None, :]]
+        if self.seed_theta_p is not None:
+            cands.append(self.seed_theta_p[subq.sq_id][None, :])
+        tp = np.concatenate(cands, 0)
+        ts = (self.seed_theta_s[subq.sq_id]
+              if self.seed_theta_s is not None
+              else self.ss.default_raw())[None, :]
+        return tp, ts
+
+    def qs_candidates(self, subq: SubQ, theta_s_cur: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """θs candidates for a QS request (θp pinned to the stage seed)."""
+        cands = [self.pool_s, theta_s_cur[None, :]]
+        if self.seed_theta_s is not None:
+            cands.append(self.seed_theta_s[subq.sq_id][None, :])
+        ts = np.concatenate(cands, 0)
+        tp = (self.seed_theta_p[subq.sq_id]
+              if self.seed_theta_p is not None
+              else self.ps.default_raw())[None, :]
+        return tp, ts
+
+    def request_for(self, req) -> Tuple["ScoreRequest", np.ndarray]:
+        """AQE request → (scoring request, the candidate rows it ranks).
+
+        ``req`` is an :class:`~repro.queryengine.aqe.LQPRequest` /
+        ``QSRequest`` (duck-typed on ``kind``); the returned candidate rows
+        are what the optimizer's response is drawn from.
+        """
+        if req.kind == "lqp":
+            tp, ts = self.lqp_candidates(req.subq, req.theta_p)
+            return ScoreRequest(self, req.subq, tp, ts, "lqp"), tp
+        tp, ts = self.qs_candidates(req.subq, req.theta_s)
+        return ScoreRequest(self, req.subq, tp, ts, "qs"), ts
+
+    # -- scoring helpers -----------------------------------------------------
+    def model_for(self, decision: str) -> Optional[PerfModel]:
+        return self.model_subq if decision == "lqp" else self.model_qs
+
+    def model_theta(self, rq: "ScoreRequest", n: int) -> np.ndarray:
+        """Unit decision vector rows for the request's model family."""
+        tcu = np.broadcast_to(self.tc_unit, (n, self.cs.dim))
+        tsu = self.ss.to_unit(np.broadcast_to(rq.theta_s, (n, self.ss.dim)))
+        if rq.decision == "lqp":
+            tpu = self.ps.to_unit(
+                np.broadcast_to(rq.theta_p, (n, self.ps.dim)))
+            return np.concatenate([tcu, tpu, tsu], -1)
+        # QS decision: θp is already fixed when a QS is optimized — the QS
+        # model drops it (θc ⊕ θs).
+        return np.concatenate([tcu, tsu], -1)
+
+    def nondecision(self, subq: SubQ) -> np.ndarray:
+        """Runtime non-decision vector: α from *true* statistics."""
+        return make_nondecision(
+            _alpha_stats(subq.input_rows, subq.input_bytes))
+
+    def objectives(self, lat: np.ndarray, io: np.ndarray) -> np.ndarray:
+        return np.stack(
+            [lat * 1.0, lat * self.rate + io * self.cost.price_io_gb], -1)
+
+
+@dataclasses.dataclass
+class ScoreRequest:
+    """One stage re-scoring request over a candidate θ set."""
+
+    backend: RuntimeOptimizerBackend
+    subq: SubQ
+    theta_p: np.ndarray          # (np_rows, 9) raw; 1 row when pinned
+    theta_s: np.ndarray          # (ns_rows, 2) raw; 1 row when pinned
+    decision: str                # "lqp" | "qs"
+
+    @property
+    def n(self) -> int:
+        return max(self.theta_p.shape[0], self.theta_s.shape[0])
+
+
+def score_requests(reqs: Sequence[ScoreRequest]) -> List[np.ndarray]:
+    """True-statistics objectives, (n, 2) per request, fused across requests.
+
+    Requests group by backend mode — oracle requests by stage kind (and cost
+    model), model requests by model — and each group resolves in ONE
+    ``simulate_stage_rows`` / ``PerfModel.predict`` call over the stacked
+    candidate rows of every member: the serving layer's cross-query fusion.
+    """
+    out: List[Optional[np.ndarray]] = [None] * len(reqs)
+    groups: Dict[tuple, List[int]] = {}
+    for i, rq in enumerate(reqs):
+        groups.setdefault(fusion_key(rq), []).append(i)
+    for key, members in groups.items():
+        if key[0] == "oracle":
+            _score_oracle_group(reqs, members, out)
+        else:
+            _score_model_group(reqs, members, key[1], out)
+    return out  # type: ignore[return-value]
+
+
+def _score_oracle_group(reqs: Sequence[ScoreRequest], members: List[int],
+                        out: List[Optional[np.ndarray]]) -> None:
+    ns = [reqs[i].n for i in members]
+    base = stage_stats_batch([reqs[i].subq for i in members])
+    stats = StageStats(**{
+        f.name: np.repeat(getattr(base, f.name), ns)
+        for f in dataclasses.fields(StageStats)})
+    tc = np.concatenate([np.broadcast_to(reqs[i].backend.tc_row, (n, 8))
+                         for i, n in zip(members, ns)])
+    tp = np.concatenate([np.broadcast_to(reqs[i].theta_p, (n, 9))
+                         for i, n in zip(members, ns)])
+    ts = np.concatenate([np.broadcast_to(reqs[i].theta_s, (n, 2))
+                         for i, n in zip(members, ns)])
+    sim = simulate_stage_rows(
+        reqs[members[0]].subq.kind, stats, tc, tp, ts,
+        cost=reqs[members[0]].backend.cost, aqe=True)
+    lo = 0
+    for i, n in zip(members, ns):
+        sl = slice(lo, lo + n)
+        lo += n
+        out[i] = reqs[i].backend.objectives(sim.ana_latency[sl],
+                                            sim.io_gb[sl])
+
+
+def _score_model_group(reqs: Sequence[ScoreRequest], members: List[int],
+                       decision: str,
+                       out: List[Optional[np.ndarray]]) -> None:
+    model = reqs[members[0]].backend.model_for(decision)
+    ns = [reqs[i].n for i in members]
+    thetas, embs, nonds = [], [], []
+    for i, n in zip(members, ns):
+        rq = reqs[i]
+        b = rq.backend
+        emb = model.embed(b.query, rq.subq.sq_id)
+        nond = b.nondecision(rq.subq)
+        thetas.append(b.model_theta(rq, n))
+        embs.append(np.broadcast_to(emb, (n, emb.shape[0])))
+        nonds.append(np.broadcast_to(nond, (n, nond.shape[0])))
+    theta = np.concatenate(thetas).astype(np.float32)
+    emb = np.concatenate(embs)
+    nond = np.concatenate(nonds)
+    # Row-bucket to a power of two so the jitted regressor head compiles
+    # O(log n) shapes across a serving session.
+    total = theta.shape[0]
+    bucket = max(64, 1 << int(np.ceil(np.log2(max(total, 2)))))
+    if bucket > total:
+        pad = bucket - total
+        theta = np.concatenate(
+            [theta, np.zeros((pad, theta.shape[1]), theta.dtype)])
+        emb = np.concatenate([emb, np.zeros((pad, emb.shape[1]), emb.dtype)])
+        nond = np.concatenate(
+            [nond, np.zeros((pad, nond.shape[1]), nond.dtype)])
+    pred = model.predict(emb, theta, nond)[:total]
+    lo = 0
+    for i, n in zip(members, ns):
+        sl = slice(lo, lo + n)
+        lo += n
+        out[i] = reqs[i].backend.objectives(pred[sl, 0], pred[sl, 1])
 
 
 def make_runtime_optimizers(
@@ -49,68 +329,27 @@ def make_runtime_optimizers(
     n_candidates: int = 64,
     cost: CostModel = DEFAULT_COST,
     seed: int = 0,
+    pools: Optional[Tuple[np.ndarray, np.ndarray]] = None,
 ):
     """Build (lqp_optimizer, qs_optimizer) callbacks for ``run_with_aqe``."""
-    ps, ss = theta_p_space(), theta_s_space()
-    rng = np.random.default_rng(seed)
-    tc_row = np.asarray(theta_c_raw, np.float64).reshape(1, -1)
-    rate = resource_rate(tc_row, cost)[0]
-
-    # Candidate pools are fixed per query (one LHS draw), plus per-stage
-    # compile-time seeds — the runtime MOO just rescores them on true stats.
-    pool_p_unit = ps.sample_lhs(rng, n_candidates)
-    pool_p = ps.to_raw(pool_p_unit)
-    pool_s_unit = ss.sample_lhs(rng, n_candidates)
-    pool_s = ss.to_raw(pool_s_unit)
-
-    def _stage_objectives_raw(sq: SubQ, tp: np.ndarray, ts: np.ndarray
-                              ) -> np.ndarray:
-        """True-statistics stage objectives for n candidate rows."""
-        n = max(tp.shape[0], ts.shape[0])
-        tc = np.broadcast_to(tc_row, (n, 8))
-        if model_qs is not None and model_subq is not None:
-            # Model path: subQ model re-scored with true stats drives θp;
-            # (QS model is used for θs where θp is already fixed.)
-            alpha = _alpha_stats(sq.input_rows, sq.input_bytes)
-            nond = make_nondecision(alpha)
-            from .spark_space import theta_c_space
-            cs = theta_c_space()
-            theta = np.concatenate([
-                np.broadcast_to(cs.to_unit(tc_row)[0], (n, 8)),
-                ps.to_unit(np.broadcast_to(tp, (n, 9))),
-                ss.to_unit(np.broadcast_to(ts, (n, 2)))], -1)
-            emb = model_subq.embed(query, sq.sq_id)
-            pred = model_subq.predict(emb, theta.astype(np.float32), nond)
-            lat, io = pred[:, 0], pred[:, 1]
-        else:
-            sim = simulate_subq(sq, tc, np.broadcast_to(tp, (n, 9)),
-                                np.broadcast_to(ts, (n, 2)), cost=cost,
-                                aqe=True, use_est_inputs=False)
-            lat, io = sim.ana_latency, sim.io_gb
-        return np.stack([lat * 1.0, lat * rate + io * cost.price_io_gb], -1)
+    b = RuntimeOptimizerBackend(
+        query, theta_c_raw, seed_theta_p=seed_theta_p,
+        seed_theta_s=seed_theta_s, model_subq=model_subq, model_qs=model_qs,
+        weights=weights, n_candidates=n_candidates, cost=cost, seed=seed,
+        pools=pools)
 
     def lqp_optimizer(*, query: Query, subq: SubQ, theta_c: np.ndarray,
                       theta_p: np.ndarray) -> Optional[np.ndarray]:
         """Re-tune θp for the collapsed plan exposing ``subq`` (a join)."""
-        cands = [pool_p, theta_p[None, :]]
-        if seed_theta_p is not None:
-            cands.append(seed_theta_p[subq.sq_id][None, :])
-        tp = np.concatenate(cands, 0)
-        ts = (seed_theta_s[subq.sq_id] if seed_theta_s is not None
-              else ss.default_raw())[None, :]
-        F = _stage_objectives_raw(subq, tp, ts)
-        return tp[_weighted_pick(F, weights)]
+        tp, ts = b.lqp_candidates(subq, theta_p)
+        F = score_requests([ScoreRequest(b, subq, tp, ts, "lqp")])[0]
+        return tp[weighted_pick_batch([F], b.weights)[0]]
 
     def qs_optimizer(*, query: Query, subq: SubQ, theta_c: np.ndarray,
                      theta_s: np.ndarray) -> Optional[np.ndarray]:
         """Re-tune θs for a newly created query stage."""
-        cands = [pool_s, theta_s[None, :]]
-        if seed_theta_s is not None:
-            cands.append(seed_theta_s[subq.sq_id][None, :])
-        ts = np.concatenate(cands, 0)
-        tp = (seed_theta_p[subq.sq_id] if seed_theta_p is not None
-              else theta_p_space().default_raw())[None, :]
-        F = _stage_objectives_raw(subq, tp, ts)
-        return ts[_weighted_pick(F, weights)]
+        tp, ts = b.qs_candidates(subq, theta_s)
+        F = score_requests([ScoreRequest(b, subq, tp, ts, "qs")])[0]
+        return ts[weighted_pick_batch([F], b.weights)[0]]
 
     return lqp_optimizer, qs_optimizer

@@ -31,12 +31,45 @@ from .plan import Query, SubQ
 from .simulator import (CostModel, DEFAULT_COST, QuerySim, decide_join,
                         plan_joins, simulate_query, upgrade_joins)
 
-__all__ = ["AQEResult", "run_with_aqe", "RuntimeOptimizer"]
+__all__ = ["AQEResult", "AQEPlanState", "LQPRequest", "QSRequest",
+           "aqe_request_stream", "realize_aqe", "run_with_aqe",
+           "RuntimeOptimizer"]
 
 
 # A runtime optimizer callback: (query, collapsed_ids, theta_c, theta_p_cur,
 # true-stats dict) -> new theta_p row (9,) or None to keep current.
 RuntimeOptimizer = Callable[..., Optional[np.ndarray]]
+
+
+@dataclasses.dataclass
+class LQPRequest:
+    """L̄QP re-optimization request: re-tune θp before planning ``subq``."""
+    query: Query
+    subq: SubQ
+    theta_c: np.ndarray          # (8,) fixed context
+    theta_p: np.ndarray          # (9,) θp copy in effect at the event
+    kind: str = "lqp"
+
+
+@dataclasses.dataclass
+class QSRequest:
+    """QS optimization request: re-tune θs for the newly created ``subq``."""
+    query: Query
+    subq: SubQ
+    theta_c: np.ndarray
+    theta_s: np.ndarray          # (2,) θs copy in effect at the event
+    kind: str = "qs"
+
+
+@dataclasses.dataclass
+class AQEPlanState:
+    """Planning outcome of one AQE pass, before execution is realized."""
+    theta_p_eff: np.ndarray      # (m, 9) θp in effect per stage
+    theta_s_eff: np.ndarray      # (m, 2)
+    planned: np.ndarray          # (m,) submission-time join algorithms
+    lqp_requests_sent: int
+    qs_requests_sent: int
+    requests_total: int
 
 
 @dataclasses.dataclass
@@ -80,27 +113,26 @@ def _join_obvious(sq: SubQ, theta_p: np.ndarray, margin: float = 4.0) -> bool:
     return True
 
 
-def run_with_aqe(
+def aqe_request_stream(
     query: Query,
     theta_c: np.ndarray,
     theta_p0: np.ndarray,
     theta_s0: np.ndarray,
     *,
-    lqp_optimizer: Optional[RuntimeOptimizer] = None,
-    qs_optimizer: Optional[RuntimeOptimizer] = None,
     prune: bool = True,
-    cost: CostModel = DEFAULT_COST,
-    rng: Optional[np.random.Generator] = None,
-) -> AQEResult:
-    """Execute one query under AQE with optional runtime re-optimization.
+):
+    """Generator form of the AQE planning loop (the batchable protocol).
 
-    Args:
-      theta_c: (8,) context parameters (fixed for the whole query).
-      theta_p0: (9,) submission-time θp copy (paper §5.2 aggregation output).
-      theta_s0: (2,) submission-time θs copy.
-      lqp_optimizer / qs_optimizer: runtime tuning callbacks; None reproduces
-        plain Spark AQE under the submitted configuration.
-      prune: apply the request-pruning rules.
+    Walks stage completions in topological order and *yields* each unpruned
+    :class:`LQPRequest` / :class:`QSRequest` instead of invoking a callback;
+    the consumer answers via ``send(new_theta_row)`` (or ``send(None)`` to
+    keep the current copy).  Returns the final :class:`AQEPlanState` as the
+    generator's ``StopIteration.value``.
+
+    :func:`run_with_aqe` drives this with synchronous callbacks; the serving
+    layer (``repro.serve.runtime``) drives many streams concurrently and
+    fuses their outstanding requests into batched optimizer calls.  Both see
+    the identical event order, pruning decisions, and request counts.
     """
     theta_c = np.asarray(theta_c, np.float64).reshape(-1)
     theta_p0 = np.asarray(theta_p0, np.float64).reshape(-1)
@@ -134,14 +166,13 @@ def run_with_aqe(
             send = stats_ready
             if prune and send:
                 send = not _join_obvious(sq, theta_p_cur)
-            if send and lqp_optimizer is not None:
-                newp = lqp_optimizer(query=query, subq=sq, theta_c=theta_c,
-                                     theta_p=theta_p_cur)
+            if send:
+                newp = yield LQPRequest(query=query, subq=sq,
+                                        theta_c=theta_c,
+                                        theta_p=theta_p_cur)
                 lqp_sent += 1
                 if newp is not None:
                     theta_p_cur = np.asarray(newp, np.float64).reshape(-1)
-            elif send:
-                lqp_sent += 1
         theta_p_eff[sid] = theta_p_cur
 
         # --- QS optimization when the stage is created ---------------------
@@ -152,24 +183,88 @@ def run_with_aqe(
             send_qs = (sq.kind != "scan") and (shuffle_in >= s1_bytes)
         if send_qs:
             qs_sent += 1
-            if qs_optimizer is not None:
-                news = qs_optimizer(query=query, subq=sq, theta_c=theta_c,
-                                    theta_s=theta_s_eff[sid])
-                if news is not None:
-                    theta_s_eff[sid] = np.asarray(news, np.float64).reshape(-1)
+            news = yield QSRequest(query=query, subq=sq, theta_c=theta_c,
+                                   theta_s=theta_s_eff[sid])
+            if news is not None:
+                theta_s_eff[sid] = np.asarray(news, np.float64).reshape(-1)
 
         completed.add(sid)
 
-    # Realize execution: runtime decisions from true statistics with each
-    # stage's effective θp, constrained by submission-planned convertibility.
-    runtime_choice = plan_joins(query, theta_p_eff[None, :, :],
+    return AQEPlanState(theta_p_eff=theta_p_eff, theta_s_eff=theta_s_eff,
+                        planned=planned, lqp_requests_sent=lqp_sent,
+                        qs_requests_sent=qs_sent,
+                        requests_total=requests_total)
+
+
+def realize_aqe(
+    query: Query,
+    theta_c: np.ndarray,
+    state: AQEPlanState,
+    *,
+    cost: CostModel = DEFAULT_COST,
+    rng: Optional[np.random.Generator] = None,
+) -> AQEResult:
+    """Realize execution for a finished planning pass.
+
+    Runtime decisions come from true statistics under each stage's effective
+    θp, constrained by submission-planned convertibility (a planned broadcast
+    is never demoted).
+    """
+    theta_c = np.asarray(theta_c, np.float64).reshape(-1)
+    runtime_choice = plan_joins(query, state.theta_p_eff[None, :, :],
                                 from_estimates=False)[0]
-    final_join = upgrade_joins(planned, runtime_choice)
+    final_join = upgrade_joins(state.planned, runtime_choice)
     sim = simulate_query(
-        query, theta_c[None, :], theta_p_eff[None, :, :],
-        theta_s_eff[None, :, :], cost=cost, aqe=True,
+        query, theta_c[None, :], state.theta_p_eff[None, :, :],
+        state.theta_s_eff[None, :, :], cost=cost, aqe=True,
         planned_join=final_join[None, :], rng=rng)
-    return AQEResult(sim=sim, theta_p_eff=theta_p_eff,
-                     theta_s_eff=theta_s_eff, final_join=final_join,
-                     lqp_requests_sent=lqp_sent, qs_requests_sent=qs_sent,
-                     requests_total=requests_total)
+    return AQEResult(sim=sim, theta_p_eff=state.theta_p_eff,
+                     theta_s_eff=state.theta_s_eff, final_join=final_join,
+                     lqp_requests_sent=state.lqp_requests_sent,
+                     qs_requests_sent=state.qs_requests_sent,
+                     requests_total=state.requests_total)
+
+
+def run_with_aqe(
+    query: Query,
+    theta_c: np.ndarray,
+    theta_p0: np.ndarray,
+    theta_s0: np.ndarray,
+    *,
+    lqp_optimizer: Optional[RuntimeOptimizer] = None,
+    qs_optimizer: Optional[RuntimeOptimizer] = None,
+    prune: bool = True,
+    cost: CostModel = DEFAULT_COST,
+    rng: Optional[np.random.Generator] = None,
+) -> AQEResult:
+    """Execute one query under AQE with optional runtime re-optimization.
+
+    Synchronous driver over :func:`aqe_request_stream`: each yielded request
+    is answered immediately by the matching callback.
+
+    Args:
+      theta_c: (8,) context parameters (fixed for the whole query).
+      theta_p0: (9,) submission-time θp copy (paper §5.2 aggregation output).
+      theta_s0: (2,) submission-time θs copy.
+      lqp_optimizer / qs_optimizer: runtime tuning callbacks; None reproduces
+        plain Spark AQE under the submitted configuration.
+      prune: apply the request-pruning rules.
+    """
+    stream = aqe_request_stream(query, theta_c, theta_p0, theta_s0,
+                                prune=prune)
+    response: Optional[np.ndarray] = None
+    while True:
+        try:
+            req = stream.send(response)
+        except StopIteration as stop:
+            state: AQEPlanState = stop.value
+            break
+        if req.kind == "lqp":
+            response = None if lqp_optimizer is None else lqp_optimizer(
+                query=req.query, subq=req.subq, theta_c=req.theta_c,
+                theta_p=req.theta_p)
+        else:
+            response = None if qs_optimizer is None else qs_optimizer(
+                query=req.query, subq=req.subq, theta_c=req.theta_c,
+                theta_s=req.theta_s)
+    return realize_aqe(query, theta_c, state, cost=cost, rng=rng)

@@ -26,13 +26,16 @@ Units: bytes for sizes, seconds for time, GB for IO accounting; θ arrays are
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .plan import Query, SubQ
 
-__all__ = ["CostModel", "SubQSim", "QuerySim", "simulate_query",
+__all__ = ["CostModel", "SubQSim", "QuerySim", "StageStats", "stage_stats",
+           "stage_stats_batch",
+           "simulate_stage_rows", "simulate_query", "assemble_query_sim",
+           "join_decision_stats",
            "JOIN_SMJ", "JOIN_SHJ", "JOIN_BHJ", "default_theta"]
 
 MB = 1e6
@@ -106,13 +109,10 @@ def _as2d(theta: np.ndarray, d: int) -> np.ndarray:
     return theta
 
 
-def _beta_metrics(mean_part: np.ndarray, skew: float) -> np.ndarray:
+def _beta_metrics(mean_part: np.ndarray, skew: np.ndarray) -> np.ndarray:
     """Partition-size distribution metrics (σ/μ, (max-μ)/μ, (max-min)/μ)."""
-    sig_mu = np.full_like(mean_part, skew * 1.2)
-    max_mu = skew * 4.0 + 0.05
-    rng_mu = skew * 5.0 + 0.1
-    return np.stack([sig_mu, np.full_like(mean_part, max_mu),
-                     np.full_like(mean_part, rng_mu)], -1)
+    skew = np.broadcast_to(np.asarray(skew, np.float64), mean_part.shape)
+    return np.stack([skew * 1.2, skew * 4.0 + 0.05, skew * 5.0 + 0.1], -1)
 
 
 def decide_join(build_bytes: np.ndarray, probe_rows: np.ndarray,
@@ -156,8 +156,68 @@ def _post_shuffle_parts(shuffle_bytes: np.ndarray, theta_p: np.ndarray,
     return parts, overhead_factor
 
 
-def simulate_subq(
-    sq: SubQ,
+@dataclasses.dataclass
+class StageStats:
+    """Per-row stage statistics for the batched core; every field is (n,).
+
+    A stage's statistics are scalars; lifting them to per-row arrays lets
+    same-kind stages from *different* queries share one
+    :func:`simulate_stage_rows` call (the serving layer's cross-query
+    fusion) while staying bit-identical to the per-stage path — both run
+    the same elementwise arithmetic.
+    """
+
+    in_bytes0: np.ndarray        # first (or only) input, bytes
+    in_bytes1: np.ndarray        # second input (joins); 0 otherwise
+    in_rows0: np.ndarray
+    in_rows1: np.ndarray
+    in_bytes_sum: np.ndarray     # Σ inputs, bytes (skew gate)
+    out_bytes: np.ndarray
+    cpu_weight: np.ndarray
+    skew: np.ndarray
+
+
+def stage_stats(sq: SubQ, n: int, *, use_est_inputs: bool = False
+                ) -> StageStats:
+    """Lift one subQ's scalar statistics to ``n`` rows."""
+    inp = sq.est_input_bytes if use_est_inputs else sq.input_bytes
+    inr = sq.est_input_rows if use_est_inputs else sq.input_rows
+    out_bytes = sq.est_out_bytes if use_est_inputs else sq.out_bytes
+    full = lambda v: np.full(n, float(v))
+    return StageStats(
+        in_bytes0=full(inp[0]),
+        in_bytes1=full(inp[1] if len(inp) > 1 else 0.0),
+        in_rows0=full(inr[0]),
+        in_rows1=full(inr[1] if len(inr) > 1 else 0.0),
+        in_bytes_sum=full(sum(inp)),
+        out_bytes=full(out_bytes),
+        cpu_weight=full(sq.cpu_weight),
+        skew=full(sq.skew),
+    )
+
+
+def stage_stats_batch(subqs: Sequence[SubQ], *, use_est_inputs: bool = False
+                      ) -> StageStats:
+    """One statistics row per subQ (n = len(subqs)), built in a single pass.
+
+    The subQs may come from different queries; only the caller's grouping
+    by ``kind`` matters for :func:`simulate_stage_rows`.
+    """
+    rows = []
+    for sq in subqs:
+        inp = sq.est_input_bytes if use_est_inputs else sq.input_bytes
+        inr = sq.est_input_rows if use_est_inputs else sq.input_rows
+        ob = sq.est_out_bytes if use_est_inputs else sq.out_bytes
+        rows.append((inp[0], inp[1] if len(inp) > 1 else 0.0,
+                     inr[0], inr[1] if len(inr) > 1 else 0.0,
+                     sum(inp), ob, sq.cpu_weight, sq.skew))
+    a = np.asarray(rows, np.float64).reshape(len(rows), 8)
+    return StageStats(*(a[:, i] for i in range(8)))
+
+
+def simulate_stage_rows(
+    kind: str,
+    st: StageStats,
     theta_c: np.ndarray,
     theta_p: np.ndarray,
     theta_s: np.ndarray,
@@ -165,22 +225,17 @@ def simulate_subq(
     cost: CostModel = DEFAULT_COST,
     aqe: bool = True,
     join_algo: Optional[np.ndarray] = None,
-    use_est_inputs: bool = False,
 ) -> SubQSim:
-    """Simulate one stage for a batch of configurations.
+    """Row-batched stage core: row i is an independent (stats, θ) sample.
 
-    ``join_algo`` overrides the algorithm (the *planned* decision realized on
-    true bytes); ``use_est_inputs`` sizes work from CBO estimates (used by
-    compile-time "what the optimizer believes" evaluations, never for ground
-    truth).
+    All stages in one call share ``kind`` (the fusion group key); statistics
+    and θ vary per row, so stacked candidate sets from many queries resolve
+    in a single pass.
     """
-    theta_c = _as2d(theta_c, 8)
-    theta_p = _as2d(theta_p, 9)
-    theta_s = _as2d(theta_s, 2)
-    n = max(theta_c.shape[0], theta_p.shape[0], theta_s.shape[0])
-    theta_c = np.broadcast_to(theta_c, (n, 8))
-    theta_p = np.broadcast_to(theta_p, (n, 9))
-    theta_s = np.broadcast_to(theta_s, (n, 2))
+    n = st.in_bytes0.shape[0]
+    theta_c = np.broadcast_to(_as2d(theta_c, 8), (n, 8))
+    theta_p = np.broadcast_to(_as2d(theta_p, 9), (n, 9))
+    theta_s = np.broadcast_to(_as2d(theta_s, 2), (n, 2))
 
     k1 = np.maximum(theta_c[:, 0], 1.0)              # cores/executor
     k2 = np.maximum(theta_c[:, 1], 0.5) * GB         # heap/executor
@@ -193,9 +248,8 @@ def simulate_subq(
     cores = k1 * k3
     task_mem = k2 * k8 / k1
 
-    inp = sq.est_input_bytes if use_est_inputs else sq.input_bytes
-    inr = sq.est_input_rows if use_est_inputs else sq.input_rows
-    out_bytes = sq.est_out_bytes if use_est_inputs else sq.out_bytes
+    out_bytes = st.out_bytes
+    cw = st.cpu_weight
 
     compress_ratio = np.where(k7, cost.compress_ratio, 1.0)
     compress_cpu = np.where(k7, 1.0 + cost.compress_cpu, 1.0)
@@ -207,11 +261,11 @@ def simulate_subq(
     shuffle_gb = np.zeros(n)
     algo_out = np.full(n, -1.0)
 
-    if sq.kind == "scan":
-        B = float(inp[0])
+    if kind == "scan":
+        B = st.in_bytes0
         s8 = np.maximum(theta_p[:, 7], 1.0) * MB     # maxPartitionBytes
         s9 = np.maximum(theta_p[:, 8], 0.25) * MB    # openCostInBytes
-        n_files = max(B / (128 * MB), 1.0)
+        n_files = np.maximum(B / (128 * MB), 1.0)
         eff_bytes = B + n_files * s9
         parts = np.maximum(np.ceil(eff_bytes / s8), 1.0)
         parts = np.maximum(parts, np.minimum(k4, 4 * cores))  # parallelism floor
@@ -220,7 +274,7 @@ def simulate_subq(
                          1.0 + cost.spill_penalty *
                          np.clip(per_task / np.maximum(task_mem, 1.0) - 1, 0, 4),
                          1.0)
-        cpu_sec = (B / GB) * cost.c_scan * sq.cpu_weight * spill
+        cpu_sec = (B / GB) * cost.c_scan * cw * spill
         io_gb = B / GB
         # Stage output feeds an exchange: shuffle write.
         w_bytes = out_bytes * compress_ratio
@@ -233,17 +287,18 @@ def simulate_subq(
         shuffle_gb = w_bytes / GB
         small_f = np.ones(n)
 
-    elif sq.kind == "join":
-        bl, br = float(inp[0]), float(inp[1])
-        rl, rr = float(inr[0]), float(inr[1])
-        build_b, probe_b = (bl, br) if bl <= br else (br, bl)
-        probe_r = rr if bl <= br else rl
+    elif kind == "join":
+        bl, br = st.in_bytes0, st.in_bytes1
+        rl, rr = st.in_rows0, st.in_rows1
+        left_small = bl <= br
+        build_b = np.where(left_small, bl, br)
+        probe_b = np.where(left_small, br, bl)
+        probe_r = np.where(left_small, rr, rl)
         shuffle_in = (bl + br) * compress_ratio
-        parts, small_f = _post_shuffle_parts(
-            np.full(n, shuffle_in), theta_p, theta_s, aqe)
+        parts, small_f = _post_shuffle_parts(shuffle_in, theta_p, theta_s,
+                                             aqe)
         if join_algo is None:
-            algo = decide_join(np.full(n, build_b), np.full(n, probe_r),
-                               theta_p, parts)
+            algo = decide_join(build_b, probe_r, theta_p, parts)
         else:
             algo = np.broadcast_to(np.asarray(join_algo), (n,))
         algo_out = algo.astype(np.float64)
@@ -287,34 +342,35 @@ def simulate_subq(
         shuffle_gb = np.select([algo == JOIN_BHJ, algo == JOIN_SHJ],
                                [bhj_shuffle, shj_shuffle], smj_shuffle)
         parts = np.where(algo == JOIN_BHJ, bhj_parts, parts)
-        # Join work itself + output write.
-        cpu_sec += (out_bytes / GB) * 0.25 * sq.cpu_weight
-        cpu_sec *= sq.cpu_weight
+        # Join work + output write; the stage CPU weight applies exactly
+        # once to each term.
+        cpu_sec = cpu_sec * cw + (out_bytes / GB) * 0.25 * cw
 
     else:  # agg (and sort)
-        B = float(inp[0])
+        B = st.in_bytes0
         shuffle_in = B * compress_ratio
-        parts, small_f = _post_shuffle_parts(
-            np.full(n, shuffle_in), theta_p, theta_s, aqe)
+        parts, small_f = _post_shuffle_parts(shuffle_in, theta_p, theta_s,
+                                             aqe)
         per_part = B / np.maximum(parts, 1.0)
         spill = np.where(per_part > task_mem, 1.0 + cost.spill_penalty, 1.0)
         cpu_sec = (B / GB) * (cost.c_shuffle_write * compress_cpu
                               + cost.c_shuffle_read * fetch_eff
-                              + cost.c_agg * spill) * sq.cpu_weight
+                              + cost.c_agg * spill) * cw
         io_gb = 2 * shuffle_in / GB
         shuffle_gb = shuffle_in / GB
 
     # ---- skew: AQE skew-split (s6 threshold, s7 factor) mitigates the tail.
-    skew = sq.skew
-    if aqe and sq.kind != "scan":
+    skew = st.skew
+    if aqe and kind != "scan":
         s6 = theta_p[:, 5] * MB
         s7 = np.maximum(theta_p[:, 6], 2.0)
-        mean_part_b = (sum(inp) / np.maximum(
-            np.maximum(np.ceil(theta_p[:, 4]), 1.0), 1.0))
+        # Mean partition size from the *post-coalesce* partition count, so
+        # s1/s11 coalescing feeds the skew-split decision.
+        mean_part_b = st.in_bytes_sum / np.maximum(parts, 1.0)
         split = (skew * 5.0 * mean_part_b > s6)
         skew_eff = np.where(split, skew / s7, skew)
     else:
-        skew_eff = np.full(n, skew)
+        skew_eff = skew
 
     # ---- assemble stage timing ------------------------------------------
     parts = np.maximum(parts, 1.0)
@@ -334,8 +390,35 @@ def simulate_subq(
         n_tasks=parts,
         join_algo=algo_out,
         shuffle_gb=shuffle_gb,
-        beta=_beta_metrics(task_seconds / parts, float(skew)),
+        beta=_beta_metrics(task_seconds / parts, skew),
     )
+
+
+def simulate_subq(
+    sq: SubQ,
+    theta_c: np.ndarray,
+    theta_p: np.ndarray,
+    theta_s: np.ndarray,
+    *,
+    cost: CostModel = DEFAULT_COST,
+    aqe: bool = True,
+    join_algo: Optional[np.ndarray] = None,
+    use_est_inputs: bool = False,
+) -> SubQSim:
+    """Simulate one stage for a batch of configurations.
+
+    ``join_algo`` overrides the algorithm (the *planned* decision realized on
+    true bytes); ``use_est_inputs`` sizes work from CBO estimates (used by
+    compile-time "what the optimizer believes" evaluations, never for ground
+    truth).
+    """
+    theta_c = _as2d(theta_c, 8)
+    theta_p = _as2d(theta_p, 9)
+    theta_s = _as2d(theta_s, 2)
+    n = max(theta_c.shape[0], theta_p.shape[0], theta_s.shape[0])
+    return simulate_stage_rows(
+        sq.kind, stage_stats(sq, n, use_est_inputs=use_est_inputs),
+        theta_c, theta_p, theta_s, cost=cost, aqe=aqe, join_algo=join_algo)
 
 
 def plan_joins(query: Query, theta_p_sub: np.ndarray,
@@ -344,23 +427,40 @@ def plan_joins(query: Query, theta_p_sub: np.ndarray,
 
     ``theta_p_sub`` is (n, m, 9): the θp copy in effect for each subQ's
     planning decision.  ``from_estimates`` selects CBO stats (submission
-    time) vs true stats (AQE re-planning).
+    time) vs true stats (AQE re-planning).  All joins resolve in one
+    :func:`decide_join` call over the flattened (config, join) rows.
     """
     n, m = theta_p_sub.shape[0], query.n_subqs
     out = np.full((n, m), -1.0)
-    for sq in query.subqs:
-        if sq.kind != "join":
-            continue
+    joins = [sq for sq in query.subqs if sq.kind == "join"]
+    if not joins:
+        return out
+    ids = [sq.sq_id for sq in joins]
+    build, probe = join_decision_stats(joins, from_estimates=from_estimates)
+    tp = np.asarray(theta_p_sub[:, ids, :], np.float64).reshape(-1, 9)
+    parts = np.maximum(tp[:, 4], 1.0)
+    algo = decide_join(np.tile(build, n), np.tile(probe, n), tp, parts)
+    out[:, ids] = algo.reshape(n, len(joins))
+    return out
+
+
+def join_decision_stats(subqs: Sequence[SubQ], *, from_estimates: bool
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """(build_bytes, probe_rows) rows for :func:`decide_join`, one per join.
+
+    Build side is the smaller input; probe rows come from the other side
+    (ties go left-as-build).  Shared by :func:`plan_joins` and the serving
+    layer's fused realization so the tie-breaking can never diverge.
+    """
+    build = np.empty(len(subqs))
+    probe = np.empty(len(subqs))
+    for j, sq in enumerate(subqs):
         inp = sq.est_input_bytes if from_estimates else sq.input_bytes
         inr = sq.est_input_rows if from_estimates else sq.input_rows
         bl, br = float(inp[0]), float(inp[1])
-        build_b = min(bl, br)
-        probe_r = float(inr[1] if bl <= br else inr[0])
-        tp = theta_p_sub[:, sq.sq_id, :]
-        parts = np.maximum(tp[:, 4], 1.0)
-        out[:, sq.sq_id] = decide_join(
-            np.full(n, build_b), np.full(n, probe_r), tp, parts)
-    return out
+        build[j] = min(bl, br)
+        probe[j] = float(inr[1] if bl <= br else inr[0])
+    return build, probe
 
 
 def upgrade_joins(planned: np.ndarray, runtime_choice: np.ndarray) -> np.ndarray:
@@ -419,6 +519,26 @@ def simulate_query(
             sq, theta_c, theta_p_sub[:, sq.sq_id, :],
             theta_s_sub[:, sq.sq_id, :], cost=cost, aqe=aqe, join_algo=algo))
 
+    return assemble_query_sim(query, theta_c, per, planned_join,
+                              cost=cost, rng=rng)
+
+
+def assemble_query_sim(
+    query: Query,
+    theta_c: np.ndarray,
+    per: List[SubQSim],
+    planned_join: np.ndarray,
+    *,
+    cost: CostModel = DEFAULT_COST,
+    rng: Optional[np.random.Generator] = None,
+) -> QuerySim:
+    """Fold per-stage outcomes into the end-to-end :class:`QuerySim`.
+
+    Shared by :func:`simulate_query` and the serving layer's fused
+    realization path (which computes ``per`` from cross-query stacked
+    stage calls).
+    """
+    n = theta_c.shape[0]
     ana = np.sum([p.ana_latency for p in per], axis=0)
     io = np.sum([p.io_gb for p in per], axis=0)
 

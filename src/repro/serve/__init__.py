@@ -1,13 +1,21 @@
-"""Batched compile-time tuning service (multi-query HMOOC serving).
+"""Batched tuning services (multi-query serving for both paper halves).
 
-Entry points:
+Compile time (§5.1):
 
 * :func:`tune_batch` — solve the compile-time MOO for a batch of queries.
 * :class:`TuningService` — long-lived server holding the effective-set
   cache so repeated-template traffic skips Algorithm 1.
 * :class:`EffectiveSetCache` — the template-keyed cache itself.
+
+Runtime (§5.2):
+
+* :class:`RuntimeSession` — AQE-triggered θp/θs re-optimization of many
+  concurrent queries through one fused, vectorized optimizer backend,
+  seeded by the compile-time results.
 """
 from .cache import EffectiveSetCache
+from .runtime import CandidatePoolCache, RuntimeSession, RuntimeSessionStats
 from .service import TuningService, tune_batch
 
-__all__ = ["EffectiveSetCache", "TuningService", "tune_batch"]
+__all__ = ["EffectiveSetCache", "TuningService", "tune_batch",
+           "RuntimeSession", "RuntimeSessionStats", "CandidatePoolCache"]

@@ -1,0 +1,298 @@
+"""Batched runtime re-optimization service (paper §5.2 at serving scale).
+
+PR 1 scaled the compile-time half of the paper's hybrid architecture
+(batched HMOOC solves); this module scales the runtime half: the
+AQE-triggered θp/θs re-tuning of *many concurrent queries* served through
+one shared, vectorized optimizer backend.
+
+Each query advances through its
+:func:`~repro.queryengine.aqe.aqe_request_stream` — the generator form of
+the AQE planning loop, which yields L̄QP/QS requests instead of invoking
+synchronous callbacks.  Every round the session collects the outstanding
+request of each still-active query and fuses them:
+
+* same-kind **oracle** requests stack their candidate rows into ONE
+  :func:`~repro.queryengine.simulator.simulate_stage_rows` call;
+* same-model requests stack into ONE :meth:`PerfModel.predict` call
+  (cached GTN embeddings, row-bucketed for the jit cache);
+* every pick resolves through
+  :func:`~repro.core.tuning.runtime.weighted_pick_batch`, which routes
+  dominance filtering and weighted-sum scoring to the Pallas
+  ``pareto_filter`` / ``ws_reduce`` kernels above the same env-gated
+  thresholds as the compile-time solver (float64 numpy fallback on CPU).
+
+After planning, execution realization fuses the same way: one stage-core
+call per stage *kind* across all queries, folded back per query with
+:func:`~repro.queryengine.simulator.assemble_query_sim`.
+
+Because the fused paths run the identical code the per-query loop runs
+(single-request batches), ``run_batch`` output is bit-identical to calling
+:func:`~repro.queryengine.aqe.run_with_aqe` with
+:func:`~repro.core.tuning.runtime.make_runtime_optimizers` callbacks per
+query on the oracle backend under the default (numpy/float64) kernel
+routing; forcing the f32 Pallas kernels via the env thresholds carries the
+usual f32 tie caveat.
+
+Seeds flow from the compile-time layer: a
+:class:`~repro.serve.TuningService` batch returns per-query
+:class:`CompileTimeResult` objects whose per-subQ θp/θs become the runtime
+candidate seeds and whose aggregated submission copies
+(``core/tuning/aggregation.py``) initialize the live θp/θs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.models.perf_model import PerfModel
+from ..core.tuning.compile_time import CompileTimeResult
+from ..core.tuning.runtime import (RuntimeOptimizerBackend, fusion_key,
+                                   sample_candidate_pools, score_requests,
+                                   weighted_pick_batch)
+from ..queryengine.aqe import (AQEPlanState, AQEResult, aqe_request_stream)
+from ..queryengine.plan import Query
+from ..queryengine.simulator import (CostModel, DEFAULT_COST, SubQSim,
+                                     assemble_query_sim, decide_join,
+                                     join_decision_stats,
+                                     simulate_stage_rows, stage_stats_batch)
+
+__all__ = ["RuntimeSession", "RuntimeSessionStats", "CandidatePoolCache"]
+
+
+class CandidatePoolCache:
+    """Shared runtime candidate pools keyed by (seed, n_candidates).
+
+    The pools are query-independent LHS draws
+    (:func:`sample_candidate_pools`), so every concurrent query in a session
+    reuses one draw — the identical arrays a standalone per-query backend
+    samples for the same seed.
+    """
+
+    def __init__(self):
+        self._pools: Dict[Tuple[int, int],
+                          Tuple[np.ndarray, np.ndarray]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, seed: int, n_candidates: int
+            ) -> Tuple[np.ndarray, np.ndarray]:
+        key = (seed, n_candidates)
+        if key not in self._pools:
+            self.misses += 1
+            self._pools[key] = sample_candidate_pools(seed, n_candidates)
+        else:
+            self.hits += 1
+        return self._pools[key]
+
+
+@dataclasses.dataclass
+class RuntimeSessionStats:
+    n_queries: int = 0
+    rounds: int = 0                  # lock-step fusion rounds
+    fused_calls: int = 0             # backend calls actually issued
+    requests_sent: int = 0           # optimizer requests serviced
+    requests_total: int = 0          # unpruned baseline (~2m per query)
+    wall_time: float = 0.0
+
+    @property
+    def prune_rate(self) -> float:
+        if self.requests_total == 0:
+            return 0.0
+        return 1.0 - self.requests_sent / self.requests_total
+
+    @property
+    def requests_per_sec(self) -> float:
+        return self.requests_sent / self.wall_time if self.wall_time else 0.0
+
+
+@dataclasses.dataclass
+class _Entry:
+    query: Query
+    ct: CompileTimeResult
+    backend: RuntimeOptimizerBackend
+    gen: object                              # aqe_request_stream generator
+    pending: object = None                   # outstanding LQP/QS request
+    state: Optional[AQEPlanState] = None
+    final_join: Optional[np.ndarray] = None  # reported (m,) algorithms
+    realized: Optional[np.ndarray] = None    # algorithms realized in the sim
+
+
+def _slice_subqsim(sim: SubQSim, r: int) -> SubQSim:
+    return SubQSim(**{f.name: getattr(sim, f.name)[r:r + 1]
+                      for f in dataclasses.fields(SubQSim)})
+
+
+class RuntimeSession:
+    """Runtime (§5.2) re-optimization server for batches of queries."""
+
+    def __init__(
+        self,
+        *,
+        model_subq: Optional[PerfModel] = None,
+        model_qs: Optional[PerfModel] = None,
+        weights: Tuple[float, float] = (0.9, 0.1),
+        n_candidates: int = 64,
+        cost: CostModel = DEFAULT_COST,
+        seed: int = 0,
+        prune: bool = True,
+        pool_cache: Optional[CandidatePoolCache] = None,
+    ):
+        self.model_subq = model_subq
+        self.model_qs = model_qs
+        self.weights = weights
+        self.n_candidates = n_candidates
+        self.cost = cost
+        self.seed = seed
+        self.prune = prune
+        self.pool_cache = pool_cache if pool_cache is not None \
+            else CandidatePoolCache()
+        self.last_batch = RuntimeSessionStats()
+
+    # -- public API ----------------------------------------------------------
+    def run_batch(
+        self,
+        queries: Sequence[Query],
+        compile_results: Sequence[CompileTimeResult],
+        *,
+        rngs: Optional[Sequence[Optional[np.random.Generator]]] = None,
+    ) -> List[AQEResult]:
+        """Run AQE with runtime re-tuning for every query; aligned results.
+
+        ``compile_results[i]`` seeds query ``i``: θc fixes its cluster,
+        per-subQ θp/θs become runtime candidates, and the aggregated
+        submission copies initialize the live θp/θs.
+        """
+        if len(queries) != len(compile_results):
+            raise ValueError(
+                f"got {len(compile_results)} compile results for "
+                f"{len(queries)} queries")
+        t0 = time.perf_counter()
+        entries: List[_Entry] = []
+        for q, ct in zip(queries, compile_results):
+            backend = RuntimeOptimizerBackend(
+                q, ct.theta_c, seed_theta_p=ct.theta_p_sub,
+                seed_theta_s=ct.theta_s_sub, model_subq=self.model_subq,
+                model_qs=self.model_qs, weights=self.weights,
+                cost=self.cost,
+                pools=self.pool_cache.get(self.seed, self.n_candidates))
+            gen = aqe_request_stream(q, ct.theta_c, ct.theta_p0, ct.theta_s0,
+                                     prune=self.prune)
+            e = _Entry(query=q, ct=ct, backend=backend, gen=gen)
+            self._step(e, None)
+            entries.append(e)
+
+        rounds = 0
+        fused = 0
+        while True:
+            waiting = [e for e in entries if e.pending is not None]
+            if not waiting:
+                break
+            rounds += 1
+            reqs, cands = [], []
+            for e in waiting:
+                sr, cand = e.backend.request_for(e.pending)
+                reqs.append(sr)
+                cands.append(cand)
+            fused += len({fusion_key(sr) for sr in reqs}) + 1  # + the pick
+            Fs = score_requests(reqs)
+            picks = weighted_pick_batch(Fs, self.weights)
+            for e, cand, j in zip(waiting, cands, picks):
+                self._step(e, cand[j])
+
+        results = self._realize_batch(entries, rngs)
+        self.last_batch = RuntimeSessionStats(
+            n_queries=len(entries), rounds=rounds, fused_calls=fused,
+            requests_sent=sum(r.requests_sent for r in results),
+            requests_total=sum(r.requests_total for r in results),
+            wall_time=time.perf_counter() - t0)
+        return results
+
+    def tune_and_run(self, queries: Sequence[Query], tuning_service
+                     ) -> Tuple[List[CompileTimeResult], List[AQEResult]]:
+        """Compile-time batch solve (seeds) + runtime batch execution."""
+        cts = tuning_service.tune_batch(queries, self.weights)
+        return cts, self.run_batch(queries, cts)
+
+    # -- internals -----------------------------------------------------------
+    @staticmethod
+    def _step(e: _Entry, response) -> None:
+        try:
+            e.pending = e.gen.send(response)
+        except StopIteration as stop:
+            e.pending = None
+            e.state = stop.value
+
+    def _realize_batch(
+        self,
+        entries: List[_Entry],
+        rngs: Optional[Sequence[Optional[np.random.Generator]]],
+    ) -> List[AQEResult]:
+        """Fused execution realization: one stage-core call per stage kind."""
+        # Join planning first, fused: every (query, join) pair resolves its
+        # true-stats and estimates-based decisions in two decide_join calls
+        # (the per-query path runs plan_joins twice per query instead).
+        jm = [(i, sq) for i, e in enumerate(entries)
+              for sq in e.query.subqs if sq.kind == "join"]
+        for e in entries:
+            e.final_join = e.state.planned.copy()
+            e.realized = e.state.planned.copy()
+        if jm:
+            subqs = [sq for _, sq in jm]
+            tp = np.stack([entries[i].state.theta_p_eff[sq.sq_id]
+                           for i, sq in jm])
+            parts = np.maximum(tp[:, 4], 1.0)
+            true_choice = decide_join(
+                *join_decision_stats(subqs, from_estimates=False), tp, parts)
+            # simulate_query re-upgrades the given plan against the
+            # estimates-based choice under the effective θp; replicate so
+            # the realized algorithms match the per-query path exactly.
+            est_choice = decide_join(
+                *join_decision_stats(subqs, from_estimates=True), tp, parts)
+            for r, (i, sq) in enumerate(jm):
+                e = entries[i]
+                fj = max(e.state.planned[sq.sq_id], float(true_choice[r]))
+                e.final_join[sq.sq_id] = fj
+                e.realized[sq.sq_id] = max(fj, float(est_choice[r]))
+
+        groups: Dict[str, List[Tuple[int, int]]] = {}
+        for idx, e in enumerate(entries):
+            for sq in e.query.subqs:
+                groups.setdefault(sq.kind, []).append((idx, sq.sq_id))
+
+        sims: Dict[Tuple[int, int], SubQSim] = {}
+        for kind, members in groups.items():
+            stats = stage_stats_batch(
+                [entries[i].query.subqs[s] for i, s in members])
+            tc = np.stack([np.asarray(entries[i].ct.theta_c, np.float64)
+                           for i, s in members])
+            tp = np.stack([entries[i].state.theta_p_eff[s]
+                           for i, s in members])
+            ts = np.stack([entries[i].state.theta_s_eff[s]
+                           for i, s in members])
+            algo = None
+            if kind == "join":
+                algo = np.array([entries[i].realized[s] for i, s in members])
+            sim = simulate_stage_rows(kind, stats, tc, tp, ts,
+                                      cost=self.cost, aqe=True,
+                                      join_algo=algo)
+            for r, (i, s) in enumerate(members):
+                sims[(i, s)] = _slice_subqsim(sim, r)
+
+        results: List[AQEResult] = []
+        for idx, e in enumerate(entries):
+            st = e.state
+            per = [sims[(idx, s)] for s in range(e.query.n_subqs)]
+            rng = rngs[idx] if rngs is not None else None
+            qsim = assemble_query_sim(
+                e.query, np.asarray(e.ct.theta_c, np.float64)[None, :], per,
+                e.final_join[None, :], cost=self.cost, rng=rng)
+            results.append(AQEResult(
+                sim=qsim, theta_p_eff=st.theta_p_eff,
+                theta_s_eff=st.theta_s_eff, final_join=e.final_join,
+                lqp_requests_sent=st.lqp_requests_sent,
+                qs_requests_sent=st.qs_requests_sent,
+                requests_total=st.requests_total))
+        return results

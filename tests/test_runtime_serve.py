@@ -1,0 +1,199 @@
+"""Runtime serving layer: batch bit-match, loop invariants, QS-model path."""
+import numpy as np
+import pytest
+
+from repro.core.models.gtn import GTNConfig
+from repro.core.models.perf_model import ModelConfig, PerfModel
+from repro.core.moo import hmooc, pareto
+from repro.core.moo.hmooc import HMOOCConfig
+from repro.core.tuning.runtime import (make_runtime_optimizers,
+                                       weighted_pick_batch)
+from repro.queryengine.aqe import run_with_aqe
+from repro.queryengine.simulator import default_theta
+from repro.queryengine.workloads import make_benchmark, serving_stream
+from repro.serve import CandidatePoolCache, RuntimeSession, TuningService
+
+CFG = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48, n_c_enrich=12,
+                  max_bank=12, seed=3)
+WEIGHTS = (0.9, 0.1)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return serving_stream("tpch", 12, seed=1)
+
+
+@pytest.fixture(scope="module")
+def compiled(stream):
+    return TuningService(cfg=CFG).tune_batch(stream, WEIGHTS)
+
+
+def _loop_results(stream, compiled):
+    out = []
+    for q, ct in zip(stream, compiled):
+        lqp_o, qs_o = make_runtime_optimizers(
+            q, ct.theta_c, seed_theta_p=ct.theta_p_sub,
+            seed_theta_s=ct.theta_s_sub, weights=WEIGHTS)
+        out.append(run_with_aqe(q, ct.theta_c, ct.theta_p0, ct.theta_s0,
+                                lqp_optimizer=lqp_o, qs_optimizer=qs_o))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: batched runtime session
+# ---------------------------------------------------------------------------
+
+def test_runtime_session_bitmatches_per_query(stream, compiled):
+    """Fused serving output is bit-identical to the per-query loop
+    (oracle backend): same θ_eff, joins, requests, and simulated outcome."""
+    ref = _loop_results(stream, compiled)
+    got = RuntimeSession(weights=WEIGHTS).run_batch(stream, compiled)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.theta_p_eff, b.theta_p_eff)
+        np.testing.assert_array_equal(a.theta_s_eff, b.theta_s_eff)
+        np.testing.assert_array_equal(a.final_join, b.final_join)
+        assert a.lqp_requests_sent == b.lqp_requests_sent
+        assert a.qs_requests_sent == b.qs_requests_sent
+        assert a.requests_total == b.requests_total
+        np.testing.assert_array_equal(a.sim.ana_latency, b.sim.ana_latency)
+        np.testing.assert_array_equal(a.sim.actual_latency,
+                                      b.sim.actual_latency)
+        np.testing.assert_array_equal(a.sim.io_gb, b.sim.io_gb)
+        np.testing.assert_array_equal(a.sim.cost, b.sim.cost)
+
+
+def test_runtime_session_stats_and_pool_reuse(stream, compiled):
+    cache = CandidatePoolCache()
+    sess = RuntimeSession(weights=WEIGHTS, pool_cache=cache)
+    res = sess.run_batch(stream, compiled)
+    st = sess.last_batch
+    assert st.n_queries == len(stream)
+    assert st.requests_sent == sum(r.requests_sent for r in res)
+    assert 0.0 <= st.prune_rate <= 1.0
+    # One LHS draw shared across every query in the batch.
+    assert cache.misses == 1 and cache.hits == len(stream) - 1
+    # Fusion actually happened: far fewer backend calls than requests.
+    assert st.fused_calls < st.requests_sent
+
+
+def test_tune_and_run_pipeline(stream):
+    svc = TuningService(cfg=CFG)
+    sess = RuntimeSession(weights=WEIGHTS)
+    cts, res = sess.tune_and_run(stream, svc)
+    assert len(cts) == len(res) == len(stream)
+    for r in res:
+        assert np.isfinite(r.sim.actual_latency).all()
+
+
+# ---------------------------------------------------------------------------
+# Runtime loop invariants
+# ---------------------------------------------------------------------------
+
+def test_aqe_never_demotes_planned_broadcast(stream, compiled):
+    """AQE convertibility: the realized algorithm is never below the
+    submission-planned one for any join, with or without re-tuning."""
+    from repro.queryengine.simulator import plan_joins
+    for res, q, ct in zip(RuntimeSession(weights=WEIGHTS)
+                          .run_batch(stream, compiled), stream, compiled):
+        planned = plan_joins(q, np.tile(ct.theta_p0, (q.n_subqs, 1))[None],
+                             from_estimates=True)[0]
+        for sq in q.subqs:
+            if sq.kind == "join":
+                assert res.final_join[sq.sq_id] >= planned[sq.sq_id]
+            else:
+                assert res.final_join[sq.sq_id] == -1.0
+
+
+def test_prune_rate_bounds(stream):
+    tc, tp, ts = default_theta(1)
+    for q in stream:
+        r = run_with_aqe(q, tc[0], tp[0], ts[0], prune=True)
+        assert 0.0 <= r.prune_rate <= 1.0
+        assert r.requests_sent <= r.requests_total
+        r2 = run_with_aqe(q, tc[0], tp[0], ts[0], prune=False)
+        assert r2.requests_sent >= r.requests_sent
+        assert r2.requests_sent <= r2.requests_total
+
+
+# ---------------------------------------------------------------------------
+# QS-model path (bugfix: the runtime QS model used to be dead code)
+# ---------------------------------------------------------------------------
+
+def _smoke_models():
+    gtn = GTNConfig(d_model=16, n_heads=2, n_layers=1, d_ff=32)
+    msub = PerfModel(ModelConfig(kind="subq", theta_dim=19, gtn=gtn,
+                                 hidden=(16,)), seed=0)
+    mqs = PerfModel(ModelConfig(kind="qs", theta_dim=10, gtn=gtn,
+                                hidden=(16,)), seed=1)
+    return msub, mqs
+
+
+class _Spy:
+    def __init__(self, model):
+        self.model = model
+        self.calls = 0
+        self._orig = model.predict
+        model.predict = self._wrapped
+
+    def _wrapped(self, *a, **kw):
+        self.calls += 1
+        return self._orig(*a, **kw)
+
+
+def test_qs_model_drives_theta_s_decisions():
+    q = make_benchmark("tpch")[8]
+    msub, mqs = _smoke_models()
+    spy_sub, spy_qs = _Spy(msub), _Spy(mqs)
+    tc = default_theta(1)[0][0]
+    lqp_o, qs_o = make_runtime_optimizers(
+        q, tc, model_subq=msub, model_qs=mqs, weights=WEIGHTS,
+        n_candidates=8)
+    join = next(sq for sq in q.subqs if sq.kind == "join")
+    ts = qs_o(query=q, subq=join, theta_c=tc,
+              theta_s=default_theta(1)[2][0])
+    assert ts.shape == (2,) and np.isfinite(ts).all()
+    assert spy_qs.calls == 1          # θs decision goes to the QS model
+    assert spy_sub.calls == 0
+    tp = lqp_o(query=q, subq=join, theta_c=tc,
+               theta_p=default_theta(1)[1][0])
+    assert tp.shape == (9,) and np.isfinite(tp).all()
+    assert spy_sub.calls == 1         # θp decision goes to the subQ model
+    assert spy_qs.calls == 1
+
+
+def test_runtime_model_backend_end_to_end(stream, compiled):
+    """Model-backed session runs and matches the model-backed per-query
+    loop (same models, same seeds → same decisions)."""
+    msub, mqs = _smoke_models()
+    sub = stream[:4]
+    cts = compiled[:4]
+    ref = []
+    for q, ct in zip(sub, cts):
+        lqp_o, qs_o = make_runtime_optimizers(
+            q, ct.theta_c, seed_theta_p=ct.theta_p_sub,
+            seed_theta_s=ct.theta_s_sub, model_subq=msub, model_qs=mqs,
+            weights=WEIGHTS)
+        ref.append(run_with_aqe(q, ct.theta_c, ct.theta_p0, ct.theta_s0,
+                                lqp_optimizer=lqp_o, qs_optimizer=qs_o))
+    got = RuntimeSession(model_subq=msub, model_qs=mqs,
+                         weights=WEIGHTS).run_batch(sub, cts)
+    for a, b in zip(ref, got):
+        assert a.requests_sent == b.requests_sent
+        np.testing.assert_allclose(a.theta_p_eff, b.theta_p_eff)
+        np.testing.assert_allclose(a.theta_s_eff, b.theta_s_eff)
+        np.testing.assert_array_equal(a.final_join, b.final_join)
+
+
+# ---------------------------------------------------------------------------
+# Kernel routing parity for the runtime pick
+# ---------------------------------------------------------------------------
+
+def test_weighted_pick_batch_kernel_matches_numpy(monkeypatch):
+    rng = np.random.default_rng(0)
+    Fs = [(rng.random((n, 2)) * 10).astype(np.float32).astype(np.float64)
+          for n in (5, 66, 130, 257)]
+    ref = weighted_pick_batch(Fs, WEIGHTS)
+    monkeypatch.setattr(pareto, "_KERNEL_MIN_N", 0)
+    monkeypatch.setattr(hmooc, "_WS_MIN_SCORES", 0)
+    got = weighted_pick_batch(Fs, WEIGHTS)
+    assert got == ref

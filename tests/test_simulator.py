@@ -6,10 +6,10 @@ from _hypothesis_compat import given, settings, st
 from repro.core.tuning.spark_space import (theta_c_space, theta_p_space,
                                            theta_s_space)
 from repro.queryengine.aqe import run_with_aqe
-from repro.queryengine.plan import topo_order
-from repro.queryengine.simulator import (JOIN_BHJ, JOIN_SHJ, JOIN_SMJ,
+from repro.queryengine.plan import SubQ, topo_order
+from repro.queryengine.simulator import (GB, JOIN_BHJ, JOIN_SHJ, JOIN_SMJ,
                                          default_theta, simulate_query,
-                                         upgrade_joins)
+                                         simulate_subq, upgrade_joins)
 from repro.queryengine.workloads import make_benchmark, make_query
 
 
@@ -100,3 +100,56 @@ def test_more_cores_not_slower_analytically(tpch):
     tc[1, 2] = tc[0, 2] * 4       # 4× executors
     r = simulate_query(q, tc, tp, ts)
     assert r.ana_latency[1] < r.ana_latency[0]
+
+
+def _join_subq(out_bytes: float, cpu_weight: float = 1.7) -> SubQ:
+    return SubQ(
+        sq_id=0, op_ids=[0], children=[], kind="join", root_op=0,
+        input_rows=(1e6, 2e6), input_bytes=(2e9, 3e9),
+        est_input_rows=(1e6, 2e6), est_input_bytes=(2e9, 3e9),
+        out_rows=1e6, out_bytes=out_bytes, est_out_rows=1e6,
+        est_out_bytes=out_bytes, cpu_weight=cpu_weight, skew=0.0, depth=1)
+
+
+def test_join_cost_composition_weight_applied_once():
+    """Regression: the join output-write term carries cpu_weight exactly
+    once — growing out_bytes by Δ grows task-seconds by (Δ/GB)·0.25·w,
+    not (Δ/GB)·0.25·w² (the weight used to be applied twice)."""
+    w = 1.7
+    tc, tp, ts = default_theta(1)
+    algo = np.array([JOIN_SMJ])
+    base = simulate_subq(_join_subq(1.0e9, w), tc, tp, ts, join_algo=algo)
+    grown = simulate_subq(_join_subq(5.0e9, w), tc, tp, ts, join_algo=algo)
+    delta = grown.task_seconds[0] - base.task_seconds[0]
+    np.testing.assert_allclose(delta, (4.0e9 / GB) * 0.25 * w, rtol=1e-9)
+    # Total join cost is linear in cpu_weight (quadratic under the old bug).
+    w2 = simulate_subq(_join_subq(1.0e9, 2 * w), tc, tp, ts, join_algo=algo)
+    w3 = simulate_subq(_join_subq(1.0e9, 3 * w), tc, tp, ts, join_algo=algo)
+    d1 = w2.task_seconds[0] - base.task_seconds[0]
+    d2 = w3.task_seconds[0] - w2.task_seconds[0]
+    np.testing.assert_allclose(d1, d2, rtol=1e-9)
+
+
+def test_skew_gate_uses_post_coalesce_parts():
+    """Regression: the AQE skew-split gate sizes partitions from the
+    post-coalesce count, so s1/s11 coalescing interacts with skew handling
+    (it used to read raw s5, where this setup never splits)."""
+    skew, B = 0.5, 10e9
+    sq = SubQ(
+        sq_id=0, op_ids=[0], children=[], kind="agg", root_op=0,
+        input_rows=(1e7,), input_bytes=(B,),
+        est_input_rows=(1e7,), est_input_bytes=(B,),
+        out_rows=1e5, out_bytes=1e8, est_out_rows=1e5, est_out_bytes=1e8,
+        cpu_weight=1.0, skew=skew, depth=1)
+    tc, tp, ts = default_theta(1)
+    tp[0, 4] = 2048.0     # s5: raw mean partition ≈ 4.9 MB → no split
+    tp[0, 0] = 512.0      # s1: coalesce to ≈ 9 parts → ≈ 1.1 GB each
+    tp[0, 5] = 256.0      # s6 threshold (MB)
+    s7 = tp[0, 6]
+    r = simulate_subq(sq, tc, tp, ts)
+    # Reconstruct skew_eff from wall = waves · mean_task · (1 + 2.5·skew_eff).
+    waves = np.ceil(r.n_tasks[0] / (tc[0, 0] * tc[0, 2]))
+    mean_task = r.task_seconds[0] / r.n_tasks[0]
+    skew_eff = (r.wall_latency[0] / (waves * mean_task) - 1.0) / 2.5
+    assert r.n_tasks[0] < 20           # coalescing actually engaged
+    np.testing.assert_allclose(skew_eff, skew / s7, rtol=1e-6)
