@@ -1,0 +1,177 @@
+"""Streaming-admission server benchmark: throughput + tail latency.
+
+Feeds a timed Poisson arrival stream (oracle backend, no trained model)
+through two admission policies on the same simulated clock (arrivals are
+simulated; optimizer work advances the clock by measured wall time):
+
+* ``batch32``  — the batch-only baseline: requests accumulate into fixed
+  batches of 32 (PR 1/PR 2's fixed-batch serving shape; mid-session
+  admission off), each batch runs ``tune_batch`` → ``RuntimeSession``.
+* ``server``   — ``repro.serve.OptimizerServer``: deadline-aware
+  micro-batches under the paper's 1 s solve budget, with late arrivals
+  admitted into the running session between fusion rounds.
+
+Reports throughput (queries / makespan) and p50/p99/max of the
+admission-to-final-plan latency, plus the compile-solve latency the
+paper's budget is stated against.  Also verifies the streaming path's
+outputs are bit-identical to the offline ``tune_batch`` →
+``RuntimeSession.run_batch`` pipeline.
+
+Run:  PYTHONPATH=src python benchmarks/bench_server.py
+      PYTHONPATH=src python benchmarks/bench_server.py --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.moo.hmooc import HMOOCConfig
+from repro.queryengine.workloads import ArrivalModel, serving_stream
+from repro.serve import (OptimizerServer, RuntimeSession, ServerConfig,
+                         TuningService)
+
+try:
+    from .common import save_bench
+except ImportError:          # standalone: python benchmarks/bench_server.py
+    from common import save_bench
+
+WEIGHTS = (0.9, 0.1)
+
+# Serving-tuned solver budget: the paper sizes Algorithm 1's sampling
+# (LHS pools, clusters, bank caps) so a solve fits the 1–2 s cloud budget;
+# this config does the same for this host class.  Halving the offline
+# defaults keeps micro-batch solves well inside the 1 s end-to-end budget
+# the benchmark asserts against.
+SERVING_CFG = dict(n_c_init=32, n_clusters=6, n_p_pool=128, n_c_enrich=32,
+                   max_bank=24)
+
+
+def _offline_reference(requests, cfg: HMOOCConfig):
+    queries = [r.query for r in requests]
+    cts = TuningService(cfg=cfg).tune_batch(queries, WEIGHTS)
+    return RuntimeSession(weights=WEIGHTS).run_batch(queries, cts)
+
+
+def _identical(served, offline) -> bool:
+    for s, ref in zip(served, offline):
+        got = s.result
+        for f, g in ((got.theta_p_eff, ref.theta_p_eff),
+                     (got.theta_s_eff, ref.theta_s_eff),
+                     (got.final_join, ref.final_join),
+                     (got.sim.ana_latency, ref.sim.ana_latency),
+                     (got.sim.actual_latency, ref.sim.actual_latency),
+                     (got.sim.io_gb, ref.sim.io_gb),
+                     (got.sim.cost, ref.sim.cost)):
+            if not np.array_equal(f, g):
+                return False
+    return True
+
+
+def run(bench: str = "tpch", n: int = 64, rate_qps: float = 16.0,
+        max_batch: int = 8, budget_s: float = 1.0,
+        baseline_batch: int = 32, seed: int = 0,
+        cfg: Optional[HMOOCConfig] = None, check: bool = True) -> dict:
+    cfg = cfg if cfg is not None else HMOOCConfig(seed=seed, **SERVING_CFG)
+    requests = serving_stream(
+        bench, n, seed=seed,
+        arrivals=ArrivalModel(kind="poisson", rate_qps=rate_qps))
+
+    # --- streaming server (deadline-aware micro-batches) -------------------
+    srv = OptimizerServer(
+        config=ServerConfig(max_batch=max_batch, solve_budget_s=budget_s),
+        weights=WEIGHTS, cfg=cfg)
+    served = srv.serve(requests)
+    server_rep = srv.latency_report(served)
+
+    # --- batch-only baseline on the same clock model -----------------------
+    base = OptimizerServer(
+        config=ServerConfig(max_batch=baseline_batch,
+                            solve_budget_s=math.inf,
+                            admit_mid_session=False),
+        weights=WEIGHTS, cfg=cfg)
+    base_served = base.serve(requests)
+    base_rep = base.latency_report(base_served)
+
+    outputs_identical = True
+    if check:
+        offline = _offline_reference(requests, cfg)
+        outputs_identical = (_identical(served, offline)
+                             and _identical(base_served, offline))
+
+    return {
+        "bench": bench,
+        "n_queries": n,
+        "rate_qps": rate_qps,
+        "max_batch": max_batch,
+        "budget_s": budget_s,
+        "baseline_batch": baseline_batch,
+        "outputs_identical": outputs_identical,
+        "server": server_rep,
+        "batch32_baseline": base_rep,
+        "speedup_qps_vs_batch32": server_rep["qps"] / base_rep["qps"],
+        "p99_plan_latency_reduction_vs_batch32":
+            base_rep["plan_latency_s"]["p99"]
+            / server_rep["plan_latency_s"]["p99"],
+        "p99_under_budget": server_rep["plan_latency_s"]["p99"] < budget_s,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="tpch", choices=["tpch", "tpcds"])
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--rate-qps", type=float, default=16.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--budget-s", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI; checks streaming-path parity "
+                         "and the solve budget, skips artifact write")
+    args = ap.parse_args()
+
+    if args.smoke:
+        # Shared CI runners are noisy: configure the paper's upper-end 2 s
+        # budget (typical smoke solves are ~0.2 s, so this still catches a
+        # real hot-path regression without wall-clock flakes).
+        budget = max(args.budget_s, 2.0)
+        cfg = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48,
+                          n_c_enrich=12, max_bank=12, seed=args.seed)
+        res = run(args.bench, n=16, rate_qps=40.0, max_batch=4,
+                  budget_s=budget, baseline_batch=8, seed=args.seed,
+                  cfg=cfg)
+        print(json.dumps(res, indent=2))
+        if not res["outputs_identical"]:
+            raise SystemExit("streaming-admission outputs diverge from the "
+                             "offline pipeline")
+        if res["server"]["solve_latency_s"]["max"] >= budget:
+            raise SystemExit(
+                f"max solve latency "
+                f"{res['server']['solve_latency_s']['max']:.3f}s breaches "
+                f"the {budget:.1f}s budget")
+        print("smoke ok")
+        return
+
+    res = run(args.bench, n=args.n, rate_qps=args.rate_qps,
+              max_batch=args.max_batch, budget_s=args.budget_s,
+              seed=args.seed)
+    print(json.dumps(res, indent=2))
+    s, b = res["server"], res["batch32_baseline"]
+    print(f"\nserver: {s['qps']:.1f} q/s, plan p99 "
+          f"{s['plan_latency_s']['p99'] * 1e3:.0f} ms | batch-32 baseline: "
+          f"{b['qps']:.1f} q/s, plan p99 "
+          f"{b['plan_latency_s']['p99'] * 1e3:.0f} ms | "
+          f"{res['speedup_qps_vs_batch32']:.2f}x qps, "
+          f"{res['p99_plan_latency_reduction_vs_batch32']:.1f}x lower p99 | "
+          f"identical: {res['outputs_identical']} | "
+          f"p99 under {res['budget_s']:.1f}s budget: "
+          f"{res['p99_under_budget']}")
+    for p in save_bench("server", res, headline=True):
+        print(f"wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ Benchmarks → paper artifacts:
   pruning           §5.2         runtime-request pruning rates
   serve             (ours)       batched tuning-service throughput
   runtime           (ours)       batched runtime re-optimization service
+  server            (ours)       streaming-admission server latency/throughput
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -56,7 +57,7 @@ def main() -> None:
     nq = None if args.full else 10
 
     from . import bench_cluster, bench_end_to_end, bench_models, bench_moo, \
-        bench_roofline, bench_runtime, bench_serve
+        bench_roofline, bench_runtime, bench_serve, bench_server
     from repro.core.moo.hmooc import HMOOCConfig
 
     registry: Dict[str, Callable[[], List[dict]]] = {
@@ -92,6 +93,8 @@ def main() -> None:
             for b in benches],
         "runtime": lambda: [bench_runtime.run(
             b, n_queries=32 if args.full else 16) for b in benches],
+        "server": lambda: [bench_server.run(
+            b, n=64 if args.full else 32) for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,
         "kernels": bench_cluster.run_kernels,

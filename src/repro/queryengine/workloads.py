@@ -26,7 +26,7 @@ from .plan import Operator, Query, SubQ, cbo_estimate
 __all__ = [
     "Table", "TPCH_TABLES", "TPCDS_TABLES",
     "make_query", "make_benchmark", "parametric_variants", "default_workload",
-    "serving_stream",
+    "serving_stream", "ArrivalModel", "StreamRequest",
 ]
 
 
@@ -282,8 +282,55 @@ def parametric_variants(benchmark: str, template: int, n: int, *,
             for v in range(start, start + n)]
 
 
+@dataclasses.dataclass(frozen=True)
+class ArrivalModel:
+    """Explicit, seeded arrival-time model for a serving stream.
+
+    Inter-arrival gaps are drawn from a named distribution with their own
+    seed stream (independent of the template/variant draws), so stream
+    *timing* is reproducible and composable: the same query sequence can be
+    replayed under different load shapes.
+
+    kinds:
+      * ``poisson`` — exponential gaps with mean ``1/rate_qps`` (open-loop
+        Poisson arrivals, the standard serving-load model);
+      * ``uniform`` — gaps uniform on ``[0, 2/rate_qps]`` (same mean rate,
+        bounded burstiness);
+      * ``fixed``   — deterministic gaps of exactly ``1/rate_qps``.
+    """
+    kind: str = "poisson"
+    rate_qps: float = 16.0
+    start_s: float = 0.0
+
+    def draw(self, n: int, seed: int = 0) -> np.ndarray:
+        """(n,) nondecreasing arrival times, deterministic per seed."""
+        if self.rate_qps <= 0:
+            raise ValueError(f"rate_qps must be positive, got {self.rate_qps}")
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 0xA221]))
+        mean_gap = 1.0 / self.rate_qps
+        if self.kind == "poisson":
+            gaps = rng.exponential(mean_gap, size=n)
+        elif self.kind == "uniform":
+            gaps = rng.uniform(0.0, 2.0 * mean_gap, size=n)
+        elif self.kind == "fixed":
+            gaps = np.full(n, mean_gap)
+        else:
+            raise ValueError(f"unknown arrival kind: {self.kind!r}")
+        return self.start_s + np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamRequest:
+    """One timed tuning request of a serving stream."""
+    rid: int                 # position in the stream (stable request id)
+    query: Query
+    arrival_s: float         # simulated-clock arrival time
+
+
 def serving_stream(benchmark: str, n: int, *, seed: int = 0,
-                   zipf_a: float = 1.3, n_variants: int = 3) -> List[Query]:
+                   zipf_a: float = 1.3, n_variants: int = 3,
+                   arrivals: Optional[ArrivalModel] = None,
+                   query_seed: int = 0):
     """A production-like stream of ``n`` tuning requests.
 
     Template popularity is Zipf-distributed (rank weights ``1/r^a`` over a
@@ -291,6 +338,15 @@ def serving_stream(benchmark: str, n: int, *, seed: int = 0,
     ``n_variants`` parametric variants, variant 0 being the most common —
     the repeated-template traffic shape that lets a serving-layer
     effective-set cache amortize Algorithm 1.  Deterministic per seed.
+
+    ``query_seed`` threads through to :func:`make_query`, so distinct query
+    populations (not just distinct orderings) can be drawn reproducibly.
+
+    Without ``arrivals`` the return value is a plain ``List[Query]`` in
+    stream order (the batch-mode interface).  With an :class:`ArrivalModel`
+    each request is stamped with an explicit seeded arrival time and the
+    return value is a ``List[StreamRequest]`` — the streaming-admission
+    interface consumed by ``repro.serve.server.OptimizerServer``.
     """
     n_t = 22 if benchmark == "tpch" else 102
     rng = np.random.default_rng(np.random.SeedSequence([seed, 0xC0FFEE]))
@@ -306,9 +362,14 @@ def serving_stream(benchmark: str, n: int, *, seed: int = 0,
         t = int(rank_of[rng.choice(n_t, p=p)])
         v = int(rng.choice(n_variants, p=pv))
         if (t, v) not in built:
-            built[(t, v)] = make_query(benchmark, t, variant=v, seed=0)
+            built[(t, v)] = make_query(benchmark, t, variant=v,
+                                       seed=query_seed)
         out.append(built[(t, v)])
-    return out
+    if arrivals is None:
+        return out
+    times = arrivals.draw(n, seed)
+    return [StreamRequest(rid=i, query=q, arrival_s=float(t))
+            for i, (q, t) in enumerate(zip(out, times))]
 
 
 def default_workload(benchmark: str, n_per_template: int = 4, *,

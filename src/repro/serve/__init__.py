@@ -6,16 +6,27 @@ Compile time (§5.1):
 * :class:`TuningService` — long-lived server holding the effective-set
   cache so repeated-template traffic skips Algorithm 1.
 * :class:`EffectiveSetCache` — the template-keyed cache itself.
+* :class:`ResponseCache` — shareable exact result-dedup LRU.
 
 Runtime (§5.2):
 
 * :class:`RuntimeSession` — AQE-triggered θp/θs re-optimization of many
   concurrent queries through one fused, vectorized optimizer backend,
-  seeded by the compile-time results.
+  seeded by the compile-time results.  Open entry set: ``admit`` /
+  ``step_round`` / ``retire_ready`` / ``realize``.
+
+Streaming (both halves unified):
+
+* :class:`OptimizerServer` — streaming-admission serving loop: deadline-
+  aware micro-batches through ``tune_batch``, AQE generators through one
+  shared ``RuntimeSession``, late arrivals admitted mid-session.
 """
-from .cache import EffectiveSetCache
-from .runtime import CandidatePoolCache, RuntimeSession, RuntimeSessionStats
-from .service import TuningService, tune_batch
+from .cache import CandidatePoolCache, EffectiveSetCache
+from .runtime import RuntimeSession, RuntimeSessionStats
+from .server import OptimizerServer, ServedQuery, ServerConfig, ServerStats
+from .service import ResponseCache, TuningService, tune_batch
 
 __all__ = ["EffectiveSetCache", "TuningService", "tune_batch",
-           "RuntimeSession", "RuntimeSessionStats", "CandidatePoolCache"]
+           "ResponseCache", "RuntimeSession", "RuntimeSessionStats",
+           "CandidatePoolCache", "OptimizerServer", "ServerConfig",
+           "ServedQuery", "ServerStats"]

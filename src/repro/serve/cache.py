@@ -1,4 +1,11 @@
-"""Template-keyed effective-set cache for the tuning service.
+"""Shared serving-layer caches (compile-time and runtime halves).
+
+:class:`EffectiveSetCache` — template-keyed Algorithm 1 artifacts for the
+compile-time service.  :class:`CandidatePoolCache` — runtime θp/θs LHS
+candidate pools shared across every concurrent query of a session.  Both
+are long-lived by design: one instance serves every micro-batch and
+admission epoch of a streaming :class:`~repro.serve.server.OptimizerServer`
+run, which is where the amortization comes from.
 
 Algorithm 1's candidate sampling (LHS θc set, clustering, crossover
 enrichment, θp⊕θs pool) depends only on the parameter spaces and the
@@ -34,7 +41,8 @@ import numpy as np
 from ..core.moo.hmooc import EffectiveSet, HMOOCConfig
 from ..queryengine.plan import Query
 
-__all__ = ["EffectiveSetCache", "query_fingerprint", "template_key"]
+__all__ = ["EffectiveSetCache", "CandidatePoolCache", "query_fingerprint",
+           "template_key"]
 
 
 def query_fingerprint(query: Query) -> int:
@@ -114,4 +122,46 @@ class EffectiveSetCache:
         return {"entries": len(self._entries), "hits": self.hits,
                 "approx_hits": self.approx_hits,
                 "structure_hits": self.structure_hits,
+                "misses": self.misses}
+
+
+class CandidatePoolCache:
+    """Shared runtime candidate pools keyed by (seed, n_candidates).
+
+    The pools are query-independent LHS draws
+    (:func:`~repro.core.tuning.runtime.sample_candidate_pools`), so every
+    concurrent query in a session — and every admission epoch of a
+    streaming server — reuses one draw: the identical arrays a standalone
+    per-query backend samples for the same seed.  Entries above
+    ``max_entries`` are LRU-evicted (an evicted pool is simply redrawn on
+    the next request, bit-identically — eviction never changes results).
+    """
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self._pools: "OrderedDict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._pools)
+
+    def get(self, seed: int, n_candidates: int
+            ) -> Tuple[np.ndarray, np.ndarray]:
+        from ..core.tuning.runtime import sample_candidate_pools  # lazy cycle
+        key = (seed, n_candidates)
+        pools = self._pools.get(key)
+        if pools is None:
+            self.misses += 1
+            pools = sample_candidate_pools(seed, n_candidates)
+            self._pools[key] = pools
+        else:
+            self.hits += 1
+        self._pools.move_to_end(key)
+        while len(self._pools) > self.max_entries:
+            self._pools.popitem(last=False)
+        return pools
+
+    def stats(self) -> dict:
+        return {"entries": len(self._pools), "hits": self.hits,
                 "misses": self.misses}

@@ -33,6 +33,17 @@ query on the oracle backend under the default (numpy/float64) kernel
 routing; forcing the f32 Pallas kernels via the env thresholds carries the
 usual f32 tie caveat.
 
+The session is an *open set*: entries join (:meth:`RuntimeSession.admit`)
+and retire (:meth:`RuntimeSession.retire_ready`) independently, and
+:meth:`RuntimeSession.step_round` fuses whatever is outstanding *right
+now* — so a streaming server can admit late arrivals between fusion rounds
+of a running session.  Every per-query decision depends only on that
+query's own candidate rows (scoring is row-independent and each weighted
+pick normalizes within its own set), so batch composition never changes a
+query's outcome: mid-session admission keeps the bit-identity guarantee.
+``run_batch`` is the closed-set convenience wrapper over the same
+lifecycle.
+
 Seeds flow from the compile-time layer: a
 :class:`~repro.serve.TuningService` batch returns per-query
 :class:`CompileTimeResult` objects whose per-subQ θp/θs become the runtime
@@ -50,42 +61,16 @@ import numpy as np
 from ..core.models.perf_model import PerfModel
 from ..core.tuning.compile_time import CompileTimeResult
 from ..core.tuning.runtime import (RuntimeOptimizerBackend, fusion_key,
-                                   sample_candidate_pools, score_requests,
-                                   weighted_pick_batch)
+                                   score_requests, weighted_pick_batch)
 from ..queryengine.aqe import (AQEPlanState, AQEResult, aqe_request_stream)
 from ..queryengine.plan import Query
 from ..queryengine.simulator import (CostModel, DEFAULT_COST, SubQSim,
                                      assemble_query_sim, decide_join,
                                      join_decision_stats,
                                      simulate_stage_rows, stage_stats_batch)
+from .cache import CandidatePoolCache
 
 __all__ = ["RuntimeSession", "RuntimeSessionStats", "CandidatePoolCache"]
-
-
-class CandidatePoolCache:
-    """Shared runtime candidate pools keyed by (seed, n_candidates).
-
-    The pools are query-independent LHS draws
-    (:func:`sample_candidate_pools`), so every concurrent query in a session
-    reuses one draw — the identical arrays a standalone per-query backend
-    samples for the same seed.
-    """
-
-    def __init__(self):
-        self._pools: Dict[Tuple[int, int],
-                          Tuple[np.ndarray, np.ndarray]] = {}
-        self.hits = 0
-        self.misses = 0
-
-    def get(self, seed: int, n_candidates: int
-            ) -> Tuple[np.ndarray, np.ndarray]:
-        key = (seed, n_candidates)
-        if key not in self._pools:
-            self.misses += 1
-            self._pools[key] = sample_candidate_pools(seed, n_candidates)
-        else:
-            self.hits += 1
-        return self._pools[key]
 
 
 @dataclasses.dataclass
@@ -118,6 +103,13 @@ class _Entry:
     state: Optional[AQEPlanState] = None
     final_join: Optional[np.ndarray] = None  # reported (m,) algorithms
     realized: Optional[np.ndarray] = None    # algorithms realized in the sim
+    rng: Optional[np.random.Generator] = None
+    tag: object = None                       # caller handle (e.g. server rid)
+
+    @property
+    def done(self) -> bool:
+        """Planning finished (generator exhausted, realization pending)."""
+        return self.pending is None and self.state is not None
 
 
 def _slice_subqsim(sim: SubQSim, r: int) -> SubQSim:
@@ -150,8 +142,97 @@ class RuntimeSession:
         self.pool_cache = pool_cache if pool_cache is not None \
             else CandidatePoolCache()
         self.last_batch = RuntimeSessionStats()
+        # Open entry set: entries join via admit() and leave via
+        # retire_ready(); step_round() fuses whatever is outstanding now.
+        self._active: List[_Entry] = []
+        self.rounds_total = 0        # fusion rounds over the session's life
+        self.fused_total = 0         # fused backend calls, cumulative
+        self.admitted_total = 0
 
-    # -- public API ----------------------------------------------------------
+    # -- open-set lifecycle --------------------------------------------------
+    def admit(
+        self,
+        query: Query,
+        ct: CompileTimeResult,
+        *,
+        rng: Optional[np.random.Generator] = None,
+        tag: object = None,
+    ) -> _Entry:
+        """Join ``query`` to the running session (between fusion rounds).
+
+        ``ct`` seeds the entry: θc fixes its cluster, per-subQ θp/θs become
+        runtime candidates, and the aggregated submission copies initialize
+        the live θp/θs.  Admission order only affects row order inside fused
+        calls — never any query's decisions — so joining a running session
+        yields the same plan as joining a fresh one.
+        """
+        backend = RuntimeOptimizerBackend(
+            query, ct.theta_c, seed_theta_p=ct.theta_p_sub,
+            seed_theta_s=ct.theta_s_sub, model_subq=self.model_subq,
+            model_qs=self.model_qs, weights=self.weights,
+            cost=self.cost,
+            pools=self.pool_cache.get(self.seed, self.n_candidates))
+        gen = aqe_request_stream(query, ct.theta_c, ct.theta_p0, ct.theta_s0,
+                                 prune=self.prune)
+        e = _Entry(query=query, ct=ct, backend=backend, gen=gen, rng=rng,
+                   tag=tag)
+        self._step(e, None)
+        self._active.append(e)
+        self.admitted_total += 1
+        return e
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    def has_pending(self) -> bool:
+        """True when some active entry has an outstanding optimizer request."""
+        return any(e.pending is not None for e in self._active)
+
+    def step_round(self) -> int:
+        """One fusion round over every outstanding request; 0 when idle.
+
+        Collects each waiting entry's request, fuses them into batched
+        backend calls, resolves the weighted picks, and advances each
+        generator.  Returns the number of requests serviced.
+        """
+        waiting = [e for e in self._active if e.pending is not None]
+        if not waiting:
+            return 0
+        self.rounds_total += 1
+        reqs, cands = [], []
+        for e in waiting:
+            sr, cand = e.backend.request_for(e.pending)
+            reqs.append(sr)
+            cands.append(cand)
+        self.fused_total += len({fusion_key(sr) for sr in reqs}) + 1  # + pick
+        Fs = score_requests(reqs)
+        picks = weighted_pick_batch(Fs, self.weights)
+        for e, cand, j in zip(waiting, cands, picks):
+            self._step(e, cand[j])
+        return len(waiting)
+
+    def retire_ready(self) -> List[_Entry]:
+        """Remove and return entries whose planning pass has finished.
+
+        Returned entries are ready for :meth:`realize`; admission order is
+        preserved.
+        """
+        done = [e for e in self._active if e.done]
+        if done:
+            self._active = [e for e in self._active if not e.done]
+        return done
+
+    def realize(self, entries: Sequence[_Entry]) -> List[AQEResult]:
+        """Fused execution realization for a cohort of retired entries.
+
+        Row-independent throughout, so realizing per-retirement cohorts
+        (streaming) and realizing one big batch (offline) produce identical
+        per-query results.
+        """
+        return self._realize_batch(list(entries))
+
+    # -- closed-set convenience ---------------------------------------------
     def run_batch(
         self,
         queries: Sequence[Query],
@@ -161,50 +242,29 @@ class RuntimeSession:
     ) -> List[AQEResult]:
         """Run AQE with runtime re-tuning for every query; aligned results.
 
-        ``compile_results[i]`` seeds query ``i``: θc fixes its cluster,
-        per-subQ θp/θs become runtime candidates, and the aggregated
-        submission copies initialize the live θp/θs.
+        Admits the whole batch, drains the fusion loop, and realizes —
+        the fixed-batch wrapper over the open-set lifecycle.
         """
         if len(queries) != len(compile_results):
             raise ValueError(
                 f"got {len(compile_results)} compile results for "
                 f"{len(queries)} queries")
+        if self._active:
+            raise RuntimeError(
+                f"run_batch on a session with {len(self._active)} active "
+                "entries; use admit()/step_round() for streaming admission")
         t0 = time.perf_counter()
-        entries: List[_Entry] = []
-        for q, ct in zip(queries, compile_results):
-            backend = RuntimeOptimizerBackend(
-                q, ct.theta_c, seed_theta_p=ct.theta_p_sub,
-                seed_theta_s=ct.theta_s_sub, model_subq=self.model_subq,
-                model_qs=self.model_qs, weights=self.weights,
-                cost=self.cost,
-                pools=self.pool_cache.get(self.seed, self.n_candidates))
-            gen = aqe_request_stream(q, ct.theta_c, ct.theta_p0, ct.theta_s0,
-                                     prune=self.prune)
-            e = _Entry(query=q, ct=ct, backend=backend, gen=gen)
-            self._step(e, None)
-            entries.append(e)
-
-        rounds = 0
-        fused = 0
-        while True:
-            waiting = [e for e in entries if e.pending is not None]
-            if not waiting:
-                break
-            rounds += 1
-            reqs, cands = [], []
-            for e in waiting:
-                sr, cand = e.backend.request_for(e.pending)
-                reqs.append(sr)
-                cands.append(cand)
-            fused += len({fusion_key(sr) for sr in reqs}) + 1  # + the pick
-            Fs = score_requests(reqs)
-            picks = weighted_pick_batch(Fs, self.weights)
-            for e, cand, j in zip(waiting, cands, picks):
-                self._step(e, cand[j])
-
-        results = self._realize_batch(entries, rngs)
+        rounds0, fused0 = self.rounds_total, self.fused_total
+        entries = [self.admit(q, ct,
+                              rng=rngs[i] if rngs is not None else None)
+                   for i, (q, ct) in enumerate(zip(queries, compile_results))]
+        while self.step_round():
+            pass
+        self.retire_ready()
+        results = self._realize_batch(entries)
         self.last_batch = RuntimeSessionStats(
-            n_queries=len(entries), rounds=rounds, fused_calls=fused,
+            n_queries=len(entries), rounds=self.rounds_total - rounds0,
+            fused_calls=self.fused_total - fused0,
             requests_sent=sum(r.requests_sent for r in results),
             requests_total=sum(r.requests_total for r in results),
             wall_time=time.perf_counter() - t0)
@@ -225,11 +285,7 @@ class RuntimeSession:
             e.pending = None
             e.state = stop.value
 
-    def _realize_batch(
-        self,
-        entries: List[_Entry],
-        rngs: Optional[Sequence[Optional[np.random.Generator]]],
-    ) -> List[AQEResult]:
+    def _realize_batch(self, entries: List[_Entry]) -> List[AQEResult]:
         """Fused execution realization: one stage-core call per stage kind."""
         # Join planning first, fused: every (query, join) pair resolves its
         # true-stats and estimates-based decisions in two decide_join calls
@@ -285,10 +341,9 @@ class RuntimeSession:
         for idx, e in enumerate(entries):
             st = e.state
             per = [sims[(idx, s)] for s in range(e.query.n_subqs)]
-            rng = rngs[idx] if rngs is not None else None
             qsim = assemble_query_sim(
                 e.query, np.asarray(e.ct.theta_c, np.float64)[None, :], per,
-                e.final_join[None, :], cost=self.cost, rng=rng)
+                e.final_join[None, :], cost=self.cost, rng=e.rng)
             results.append(AQEResult(
                 sim=qsim, theta_p_eff=st.theta_p_eff,
                 theta_s_eff=st.theta_s_eff, final_join=e.final_join,

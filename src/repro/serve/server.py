@@ -1,0 +1,308 @@
+"""Streaming-admission optimizer server (compile-time + runtime, unified).
+
+The paper's cloud constraint is a 1–2 s solving budget per query arriving
+in an *online stream*; PR 1/PR 2 built the two optimizer halves for fixed,
+fully-formed batches.  :class:`OptimizerServer` closes the gap: it accepts
+queries as they arrive (a simulated-clock event queue fed by
+:func:`~repro.queryengine.workloads.serving_stream` with an
+:class:`~repro.queryengine.workloads.ArrivalModel`), accumulates them into
+deadline-aware micro-batches, routes each micro-batch through the batched
+compile-time solve (:meth:`TuningService.tune_batch`) and then drives the
+resulting AQE generators through one long-lived, shared
+:class:`RuntimeSession` — admitting late arrivals into the *running*
+session between fusion rounds instead of holding them for the next batch.
+
+Admission policy (deadline-aware micro-batching):
+
+* a micro-batch flushes when ``max_batch`` requests are waiting, or
+* when the simulated clock reaches the oldest waiting request's flush
+  deadline ``arrival + solve_budget_s − reserve``, where the reserve is an
+  EWMA of recent micro-batch solve times (seeded by ``solve_reserve_s``) —
+  i.e. the latest moment solving can start and still make the budget.
+
+Clock model: arrivals advance on the simulated clock; optimizer work
+(compile solves, fusion rounds, realization) advances it by measured wall
+time.  Batch composition therefore depends on timing — but no per-query
+*output* does: compile-time results are per-query deterministic (caches
+are exact) and every runtime decision depends only on the query's own
+candidate rows, so the served plans and objectives are bit-identical to
+the offline ``tune_batch`` → ``RuntimeSession.run_batch`` pipeline on the
+oracle backend, however the stream is sliced.
+
+Caches (:class:`~repro.serve.cache.EffectiveSetCache`,
+:class:`~repro.serve.service.ResponseCache`,
+:class:`~repro.serve.cache.CandidatePoolCache`) live on the long-lived
+service/session objects, so they amortize across micro-batches and
+admission epochs — the whole point of serving over per-request solving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.models.perf_model import PerfModel
+from ..core.moo.hmooc import HMOOCConfig
+from ..core.tuning.compile_time import CompileTimeResult
+from ..queryengine.aqe import AQEResult
+from ..queryengine.workloads import StreamRequest
+from .runtime import RuntimeSession
+from .service import TuningService
+
+__all__ = ["OptimizerServer", "ServerConfig", "ServedQuery", "ServerStats"]
+
+Weights = Tuple[float, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Admission/scheduling policy of the streaming server."""
+    max_batch: int = 8                 # flush when this many requests wait
+    solve_budget_s: float = 1.0        # the paper's per-query cloud budget
+    solve_reserve_s: float = 0.25      # initial solve-time reserve (EWMA seed)
+    reserve_ewma: float = 0.3          # EWMA weight of the newest batch solve
+    admit_mid_session: bool = True     # late arrivals join the running session
+
+
+@dataclasses.dataclass
+class ServedQuery:
+    """One request's lifecycle through the server (simulated-clock times)."""
+    rid: int
+    request: StreamRequest
+    arrival_s: float
+    admitted_s: float = math.nan       # micro-batch flush began
+    compiled_s: float = math.nan       # compile-time θ ready
+    finished_s: float = math.nan       # final plan + objectives realized
+    joined_running: bool = False       # admitted into an already-live session
+    ct: Optional[CompileTimeResult] = None
+    result: Optional[AQEResult] = None
+
+    @property
+    def solve_latency_s(self) -> float:
+        """Admission-to-compile-time-θ latency (the paper's solve budget)."""
+        return self.compiled_s - self.arrival_s
+
+    @property
+    def plan_latency_s(self) -> float:
+        """Admission-to-final-plan latency (through runtime re-tuning)."""
+        return self.finished_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class ServerStats:
+    n_queries: int = 0
+    n_micro_batches: int = 0
+    n_joined_running: int = 0          # admissions into a live session
+    rounds: int = 0                    # fusion rounds over the run
+    makespan_s: float = 0.0            # last finish − first arrival (sim)
+    wall_time_s: float = 0.0           # real time spent in serve()
+
+    @property
+    def qps(self) -> float:
+        return self.n_queries / self.makespan_s if self.makespan_s else 0.0
+
+
+class OptimizerServer:
+    """Unified streaming server over both optimizer halves.
+
+    One instance is a long-lived process: :meth:`serve` can be called on
+    successive streams and every cache keeps amortizing.
+    """
+
+    def __init__(
+        self,
+        *,
+        config: ServerConfig = ServerConfig(),
+        weights: Optional[Weights] = None,
+        cfg: Optional[HMOOCConfig] = None,
+        model: Optional[PerfModel] = None,
+        tuning: Optional[TuningService] = None,
+        session: Optional[RuntimeSession] = None,
+    ):
+        """``weights`` parameterizes the default-built session, ``cfg`` and
+        ``model`` the default-built *compile-time* service (``model`` is the
+        §5.1 subQ objective model; the default session stays on the oracle
+        runtime backend).  For model-backed runtime re-scoring pass a
+        prebuilt ``session`` with ``model_subq``/``model_qs`` set; prebuilt
+        ``tuning``/``session`` objects also share caches across servers.
+        Mixing a prebuilt object with the knobs it subsumes is rejected
+        rather than silently resolved."""
+        if tuning is not None and (cfg is not None or model is not None):
+            raise ValueError(
+                "pass cfg/model or a prebuilt tuning service, not both")
+        if session is not None and weights is not None \
+                and tuple(weights) != tuple(session.weights):
+            raise ValueError(
+                f"weights={tuple(weights)} conflicts with the prebuilt "
+                f"session's weights={tuple(session.weights)}")
+        self.config = config
+        self.tuning = tuning if tuning is not None else TuningService(
+            model=model, cfg=cfg if cfg is not None else HMOOCConfig())
+        self.session = session if session is not None else RuntimeSession(
+            weights=weights if weights is not None else (0.9, 0.1))
+        self.weights = self.session.weights
+        self._reserve_s = config.solve_reserve_s
+        self.last_run = ServerStats()
+
+    # -- scheduling ----------------------------------------------------------
+    def _flush_deadline(self, waiting: "deque[ServedQuery]") -> float:
+        if not waiting:
+            return math.inf
+        return (waiting[0].arrival_s + self.config.solve_budget_s
+                - self._reserve_s)
+
+    def _note_solve(self, dt: float, n: int) -> None:
+        # EWMA of the per-batch solve wall time: the reserve the deadline
+        # policy holds back so a flush still meets the budget.
+        del n
+        a = self.config.reserve_ewma
+        self._reserve_s = (1 - a) * self._reserve_s + a * dt
+
+    # -- main loop -----------------------------------------------------------
+    def serve(self, requests: Sequence[StreamRequest]) -> List[ServedQuery]:
+        """Serve a timed stream to completion; results in request order.
+
+        Each returned :class:`ServedQuery` carries the compile-time result,
+        the realized :class:`AQEResult`, and the simulated-clock lifecycle
+        times the latency metrics derive from.
+        """
+        wall0 = time.perf_counter()
+        cfgv = self.config
+        if self.session.n_active:
+            raise RuntimeError(
+                f"serve() requires an idle session; {self.session.n_active} "
+                "entries are already active (admitted outside this server)")
+        served: Dict[int, ServedQuery] = {
+            r.rid: ServedQuery(rid=r.rid, request=r, arrival_s=r.arrival_s)
+            for r in requests}
+        if len(served) != len(requests):
+            raise ValueError(
+                f"duplicate rids in request stream: {len(requests)} requests "
+                f"but {len(served)} distinct rids")
+        incoming = deque(sorted(served.values(), key=lambda s: (s.arrival_s,
+                                                                s.rid)))
+        waiting: "deque[ServedQuery]" = deque()
+        in_flight: Dict[int, ServedQuery] = {}   # rid -> admitted, unrealized
+        t = incoming[0].arrival_s if incoming else 0.0
+        first_arrival = t
+        n_batches = 0
+        n_joined_running = 0
+        flushes_since_round = 0
+        rounds0 = self.session.rounds_total
+
+        def admit_arrived(now: float) -> None:
+            while incoming and incoming[0].arrival_s <= now:
+                waiting.append(incoming.popleft())
+
+        def flush_due(now: float) -> bool:
+            if not waiting:
+                return False
+            if self.session.n_active:
+                # A session is live: join it eagerly between fusion rounds
+                # (the optimizer is busy either way), unless running
+                # batch-only.  At most one flush per round, so sustained
+                # arrivals can never starve in-flight queries of the rounds
+                # they need to finish.
+                return cfgv.admit_mid_session and flushes_since_round < 1
+            if len(waiting) >= cfgv.max_batch:
+                return True
+            if not incoming:
+                # End of stream: nothing else will arrive, waiting longer
+                # only adds latency.
+                return True
+            return now >= self._flush_deadline(waiting)
+
+        def finish(cohort, results, now: float) -> None:
+            for e, res in zip(cohort, results):
+                s = served[e.tag]
+                s.result = res
+                s.finished_s = now
+                in_flight.pop(s.rid, None)
+
+        admit_arrived(t)
+        while incoming or waiting or in_flight:
+            if flush_due(t):
+                batch = [waiting.popleft()
+                         for _ in range(min(cfgv.max_batch, len(waiting)))]
+                n_batches += 1
+                flushes_since_round += 1
+                for s in batch:
+                    s.admitted_s = t
+                t0 = time.perf_counter()
+                cts = self.tuning.tune_batch([s.request.query for s in batch],
+                                             self.weights)
+                self._note_solve(time.perf_counter() - t0, len(batch))
+                joined_running = self.session.n_active > 0
+                for s, ct in zip(batch, cts):
+                    s.ct = ct
+                    s.joined_running = joined_running
+                    if joined_running:
+                        n_joined_running += 1
+                    self.session.admit(s.request.query, ct, tag=s.rid)
+                    in_flight[s.rid] = s
+                # The clock covers the whole window — the solve plus each
+                # query's initial AQE planning step inside admit().
+                t += time.perf_counter() - t0
+                for s in batch:
+                    s.compiled_s = t
+                admit_arrived(t)
+                continue
+            if self.session.has_pending() or self.session.n_active:
+                flushes_since_round = 0
+                t0 = time.perf_counter()
+                self.session.step_round()
+                done = self.session.retire_ready()
+                results = self.session.realize(done) if done else []
+                t += time.perf_counter() - t0
+                if done:
+                    finish(done, results, t)
+                admit_arrived(t)
+                continue
+            # Idle: jump the simulated clock to the next event.
+            nxt = min(incoming[0].arrival_s if incoming else math.inf,
+                      self._flush_deadline(waiting))
+            if not math.isfinite(nxt):
+                break
+            t = max(t, nxt)
+            admit_arrived(t)
+
+        out = [served[r.rid] for r in requests]
+        finished = [s.finished_s for s in out if math.isfinite(s.finished_s)]
+        self.last_run = ServerStats(
+            n_queries=len(out), n_micro_batches=n_batches,
+            n_joined_running=n_joined_running,
+            rounds=self.session.rounds_total - rounds0,
+            makespan_s=(max(finished) - first_arrival) if finished else 0.0,
+            wall_time_s=time.perf_counter() - wall0)
+        return out
+
+    # -- reporting -----------------------------------------------------------
+    def latency_report(self, served: Sequence[ServedQuery]) -> dict:
+        """p50/p99/max of the two latency metrics plus throughput."""
+        plan = np.array([s.plan_latency_s for s in served], np.float64)
+        solve = np.array([s.solve_latency_s for s in served], np.float64)
+        st = self.last_run
+        return {
+            "n_queries": st.n_queries,
+            "n_micro_batches": st.n_micro_batches,
+            "n_joined_running": st.n_joined_running,
+            "rounds": st.rounds,
+            "makespan_s": st.makespan_s,
+            "qps": st.qps,
+            "solve_latency_s": _pcts(solve),
+            "plan_latency_s": _pcts(plan),
+        }
+
+
+def _pcts(x: np.ndarray) -> dict:
+    if x.size == 0:
+        return {"p50": math.nan, "p99": math.nan, "max": math.nan,
+                "mean": math.nan}
+    return {"p50": float(np.percentile(x, 50)),
+            "p99": float(np.percentile(x, 99)),
+            "max": float(x.max()),
+            "mean": float(x.mean())}

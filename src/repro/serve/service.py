@@ -32,7 +32,7 @@ from ..queryengine.plan import Query
 from ..queryengine.simulator import CostModel, DEFAULT_COST
 from .cache import EffectiveSetCache, query_fingerprint
 
-__all__ = ["TuningService", "tune_batch"]
+__all__ = ["TuningService", "tune_batch", "ResponseCache"]
 
 Weights = Tuple[float, float]
 
@@ -49,23 +49,33 @@ class BatchStats:
         return self.n_queries / self.wall_time if self.wall_time else 0.0
 
 
-class _ResultCache:
+class ResponseCache:
     """Bounded LRU of finished results keyed by (fingerprint, weights).
 
     Exact by construction: the solver is deterministic, so an identical
     request (same statistics, weights, config, model) maps to a
-    bit-identical :class:`CompileTimeResult`.
+    bit-identical :class:`CompileTimeResult`.  Shareable: a streaming
+    server passes one instance to its :class:`TuningService` so dedup
+    spans micro-batches and admission epochs, not just one batch.
     """
 
     def __init__(self, max_entries: int = 4096):
         from collections import OrderedDict
         self.max_entries = max_entries
         self._d: "OrderedDict[tuple, CompileTimeResult]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
 
     def get(self, key):
         r = self._d.get(key)
         if r is not None:
+            self.hits += 1
             self._d.move_to_end(key)
+        else:
+            self.misses += 1
         return r
 
     def put(self, key, result) -> None:
@@ -73,6 +83,10 @@ class _ResultCache:
         self._d.move_to_end(key)
         while len(self._d) > self.max_entries:
             self._d.popitem(last=False)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._d), "hits": self.hits,
+                "misses": self.misses}
 
 
 class TuningService:
@@ -87,6 +101,7 @@ class TuningService:
         cache: Optional[EffectiveSetCache] = None,
         reuse_banks_across_variants: bool = False,
         dedupe: bool = True,
+        response_cache: Optional[ResponseCache] = None,
     ):
         self.model = model
         self.cfg = cfg
@@ -94,7 +109,10 @@ class TuningService:
         self.cache = cache if cache is not None else EffectiveSetCache(
             reuse_banks_across_variants=reuse_banks_across_variants)
         self.dedupe = dedupe
-        self._results = _ResultCache() if dedupe else None
+        if response_cache is not None:
+            self._results: Optional[ResponseCache] = response_cache
+        else:
+            self._results = ResponseCache() if dedupe else None
         self.last_batch = BatchStats()
 
     def tune_batch(
@@ -110,7 +128,12 @@ class TuningService:
         for qi, (q, w) in enumerate(zip(queries, per_q_weights)):
             # qid + statistics fingerprint: the 32-bit crc alone could
             # collide across distinct queries in a long-lived service.
-            key = (q.qid, query_fingerprint(q), w)
+            # cfg/cost/model complete the inputs the solver reads, so one
+            # ResponseCache can be shared across differently-configured
+            # services (the model object in the key also pins it live,
+            # keeping identity-hashed entries unambiguous).
+            key = (q.qid, query_fingerprint(q), w, self.cfg, self.cost,
+                   self.model)
             if self._results is not None:
                 hit = self._results.get(key)
                 if hit is not None:

@@ -1,0 +1,165 @@
+"""Cache correctness: LRU eviction, fingerprint stability, hit taxonomy.
+
+Covers the three long-lived serving caches shared across micro-batches and
+admission epochs: :class:`EffectiveSetCache`, :class:`CandidatePoolCache`,
+and :class:`ResponseCache`.
+"""
+import numpy as np
+import pytest
+
+from repro.core.moo.hmooc import HMOOCConfig, build_candidates
+from repro.queryengine.workloads import make_query
+from repro.serve import CandidatePoolCache, EffectiveSetCache, TuningService
+from repro.serve.cache import query_fingerprint
+from repro.serve.service import ResponseCache
+
+CFG = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48, n_c_enrich=12,
+                  max_bank=12, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction under capacity pressure
+# ---------------------------------------------------------------------------
+
+def test_effective_set_cache_lru_eviction():
+    cache = EffectiveSetCache(max_entries=3)
+    eset = build_candidates(4, 6, CFG)
+    queries = [make_query("tpch", t) for t in range(5)]
+    for q in queries[:3]:
+        cache.store(q, CFG, eset)
+    assert len(cache) == 3
+    # Touch template 0 so template 1 becomes the LRU victim.
+    assert cache.lookup(queries[0], CFG) is not None
+    cache.store(queries[3], CFG, eset)
+    assert len(cache) == 3
+    assert cache.lookup(queries[1], CFG) is None        # evicted
+    assert cache.lookup(queries[0], CFG) is not None    # recency preserved
+    assert cache.lookup(queries[3], CFG) is not None
+    # Storing an existing key replaces, never grows.
+    cache.store(queries[3], CFG, eset)
+    assert len(cache) == 3
+
+
+def test_candidate_pool_cache_lru_eviction():
+    cache = CandidatePoolCache(max_entries=2)
+    p0 = cache.get(0, 8)
+    cache.get(1, 8)
+    cache.get(2, 8)                    # evicts (0, 8)
+    assert len(cache) == 2
+    assert cache.stats() == {"entries": 2, "hits": 0, "misses": 3}
+    # Redraw after eviction is bit-identical — eviction never changes
+    # results, only amortization.
+    p0_again = cache.get(0, 8)
+    assert cache.misses == 4
+    np.testing.assert_array_equal(p0[0], p0_again[0])
+    np.testing.assert_array_equal(p0[1], p0_again[1])
+    # Recency: (0,8) touch above made (2,8) ... (0,8) the live set.
+    cache.get(0, 8)
+    assert cache.hits == 1
+
+
+def test_response_cache_lru_and_stats():
+    cache = ResponseCache(max_entries=2)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1          # refresh "a"; "b" is now LRU
+    cache.put("c", 3)
+    assert len(cache) == 2
+    assert cache.get("b") is None       # evicted
+    assert cache.get("a") == 1 and cache.get("c") == 3
+    assert cache.stats() == {"entries": 2, "hits": 3, "misses": 1}
+
+
+def test_response_cache_shared_across_configs_is_safe():
+    """A ResponseCache shared by differently-configured services must never
+    cross-serve: the key includes cfg/cost/model, so each service solves
+    and hits only its own entries."""
+    other = HMOOCConfig(n_c_init=12, n_clusters=3, n_p_pool=32, n_c_enrich=8,
+                        max_bank=8, seed=3)
+    rc = ResponseCache()
+    q = make_query("tpch", 3, variant=1)
+    a = TuningService(cfg=CFG, response_cache=rc)
+    b = TuningService(cfg=other, response_cache=rc)
+    ra = a.tune_batch([q])[0]
+    rb = b.tune_batch([q])[0]
+    assert rc.misses == 2 and len(rc) == 2     # no cross-config hit
+    # Warm replays hit only their own service's entry, exactly.
+    ra2 = a.tune_batch([q])[0]
+    rb2 = b.tune_batch([q])[0]
+    assert rc.hits == 2
+    np.testing.assert_array_equal(ra.front, ra2.front)
+    np.testing.assert_array_equal(rb.front, rb2.front)
+    np.testing.assert_array_equal(ra.theta_c, ra2.theta_c)
+    np.testing.assert_array_equal(rb.theta_c, rb2.theta_c)
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint stability
+# ---------------------------------------------------------------------------
+
+def test_query_fingerprint_stable_across_reconstructions():
+    """Process-identical reconstructions (same generator inputs) must map
+    to the same fingerprint — that is what makes cross-epoch exact hits
+    sound — while any statistics perturbation must change it."""
+    a = make_query("tpcds", 7, variant=2, seed=4)
+    b = make_query("tpcds", 7, variant=2, seed=4)
+    assert a is not b
+    assert query_fingerprint(a) == query_fingerprint(b)
+    assert query_fingerprint(a) != query_fingerprint(
+        make_query("tpcds", 7, variant=3, seed=4))
+    assert query_fingerprint(a) != query_fingerprint(
+        make_query("tpcds", 7, variant=2, seed=5))
+    # Sensitive to any single statistic the stage objectives read.
+    import dataclasses
+    c = make_query("tpcds", 7, variant=2, seed=4)
+    sq = c.subqs[0]
+    c.subqs[0] = dataclasses.replace(sq, out_rows=sq.out_rows + 1.0)
+    assert query_fingerprint(c) != query_fingerprint(a)
+
+
+# ---------------------------------------------------------------------------
+# Structure-hit vs exact-hit distinction (reuse_banks_across_variants)
+# ---------------------------------------------------------------------------
+
+def _warm_and_lookup(reuse: bool):
+    svc = TuningService(cfg=CFG, dedupe=False,
+                        reuse_banks_across_variants=reuse)
+    v1 = make_query("tpch", 3, variant=1)
+    v2 = make_query("tpch", 3, variant=2)
+    svc.tune_batch([v1])
+    svc.tune_batch([v2])
+    return svc
+
+
+def test_structure_hit_vs_exact_hit_distinction():
+    # Exact (default): a different variant of a cached template is a
+    # structure hit — candidates reused, banks recomputed.
+    svc = _warm_and_lookup(reuse=False)
+    st = svc.cache.stats()
+    assert st["structure_hits"] == 1 and st["approx_hits"] == 0
+    # Approximate opt-in: the same traffic becomes an approx (bank-reuse)
+    # hit instead.
+    svc = _warm_and_lookup(reuse=True)
+    st = svc.cache.stats()
+    assert st["approx_hits"] == 1 and st["structure_hits"] == 0
+    # Identical-query traffic is always an exact full hit in both modes.
+    for reuse in (False, True):
+        svc = TuningService(cfg=CFG, dedupe=False,
+                            reuse_banks_across_variants=reuse)
+        q = make_query("tpch", 3, variant=1)
+        svc.tune_batch([q])
+        svc.tune_batch([make_query("tpch", 3, variant=1)])
+        assert svc.cache.stats()["hits"] == 1
+        assert svc.cache.stats()["approx_hits"] == 0
+
+
+def test_bank_reuse_not_restored_as_exact():
+    """After an approximate cross-variant solve the stored fingerprint must
+    still be the bank-origin query's: the variant must NOT later be served
+    as an exact hit."""
+    svc = _warm_and_lookup(reuse=True)
+    v2 = make_query("tpch", 3, variant=2)
+    svc.tune_batch([v2])
+    st = svc.cache.stats()
+    assert st["approx_hits"] == 2      # v2 again: still approximate
+    assert st["hits"] == 0
