@@ -30,7 +30,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core.moo.hmooc import HMOOCConfig
-from repro.queryengine.workloads import ArrivalModel, serving_stream
+from repro.queryengine.workloads import (ArrivalModel, TenantSpec,
+                                         multi_tenant_stream, serving_stream)
 from repro.serve import (OptimizerServer, RuntimeSession, ServerConfig,
                          TuningService)
 
@@ -120,6 +121,86 @@ def run(bench: str = "tpch", n: int = 64, rate_qps: float = 16.0,
     }
 
 
+# Per-tenant preference spread for the multi-tenant scenario: from
+# latency-heavy to cost-heavy users (UDAO-style per-user weights).
+TENANT_PREFS = [(0.9, 0.1), (0.7, 0.3), (0.5, 0.5), (0.2, 0.8), (0.1, 0.9)]
+
+
+def run_tenants(bench: str = "tpch", n: int = 64, rate_qps: float = 16.0,
+                n_tenants: int = 4, max_batch: int = 8, budget_s: float = 1.0,
+                seed: int = 0, cfg: Optional[HMOOCConfig] = None,
+                check: bool = True) -> dict:
+    """Multi-tenant streaming scenario at equal aggregate load.
+
+    ``n_tenants`` tenants with different preference weights (and one
+    double-share, one priority tenant) split the same total arrival rate
+    and query count as the single-stream run; reports per-tenant p99 plan
+    latency, the Jain fairness index over those tails, whether any tenant
+    regresses vs the single anonymous stream, and per-tenant parity with
+    the offline pipeline solved under that tenant's own weights.
+    """
+    cfg = cfg if cfg is not None else HMOOCConfig(seed=seed, **SERVING_CFG)
+    sc = ServerConfig(max_batch=max_batch, solve_budget_s=budget_s)
+
+    # --- single-stream baseline at the same aggregate load -----------------
+    base_reqs = serving_stream(
+        bench, n, seed=seed,
+        arrivals=ArrivalModel(kind="poisson", rate_qps=rate_qps))
+    base_srv = OptimizerServer(config=sc, weights=WEIGHTS, cfg=cfg)
+    base_rep = base_srv.latency_report(base_srv.serve(base_reqs))
+
+    # --- the tenant mix ----------------------------------------------------
+    specs = [TenantSpec(
+        name=f"t{i}", weights=TENANT_PREFS[i % len(TENANT_PREFS)],
+        arrivals=ArrivalModel(kind="poisson", rate_qps=rate_qps / n_tenants),
+        share=2.0 if i == 0 else 1.0,
+        priority=1 if i == 1 and n_tenants > 1 else 0) for i in range(n_tenants)]
+    # Distribute the remainder so the aggregate query count exactly equals
+    # the single-stream baseline's.
+    counts = [n // n_tenants + (1 if i < n % n_tenants else 0)
+              for i in range(n_tenants)]
+    reqs = multi_tenant_stream(bench, specs, counts, seed=seed)
+    srv = OptimizerServer(config=sc, weights=WEIGHTS, cfg=cfg, tenants=specs)
+    served = srv.serve(reqs)
+    rep = srv.latency_report(served)
+
+    per_tenant_identical = True
+    if check:
+        for spec in specs:
+            sub = [s for s in served if s.tenant == spec.name]
+            queries = [s.request.query for s in sub]
+            cts = TuningService(cfg=cfg).tune_batch(queries, spec.weights)
+            ref = RuntimeSession(weights=spec.weights).run_batch(queries, cts)
+            if not _identical(sub, ref):
+                per_tenant_identical = False
+
+    p99s = {s.name: rep["tenants"][s.name]["plan_latency_s"]["p99"]
+            for s in specs}
+    base_p99 = base_rep["plan_latency_s"]["p99"]
+    return {
+        "bench": bench,
+        "n_queries": len(reqs),
+        "n_tenants": n_tenants,
+        "aggregate_rate_qps": rate_qps,
+        "max_batch": max_batch,
+        "budget_s": budget_s,
+        "tenant_specs": [{"name": s.name, "weights": list(s.weights),
+                          "share": s.share, "priority": s.priority,
+                          "rate_qps": s.arrivals.rate_qps} for s in specs],
+        "outputs_identical_per_tenant": per_tenant_identical,
+        "tenants": rep["tenants"],
+        "fairness_jain": rep["fairness_jain"],
+        "tenant_p99_plan_latency_s": p99s,
+        "baseline_single_stream_p99_s": base_p99,
+        "max_tenant_p99_s": max(p99s.values()),
+        "no_tenant_p99_regression":
+            max(p99s.values()) <= base_p99 * 1.05,
+        "server": {k: rep[k] for k in ("n_queries", "n_micro_batches",
+                                       "qps", "plan_latency_s",
+                                       "solve_latency_s")},
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="tpch", choices=["tpch", "tpcds"])
@@ -128,6 +209,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--budget-s", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", type=int, nargs="?", const=4, default=0,
+                    help="run the multi-tenant scenario with N tenants "
+                         "(default 4 when given without a value)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI; checks streaming-path parity "
                          "and the solve budget, skips artifact write")
@@ -140,6 +224,22 @@ def main():
         budget = max(args.budget_s, 2.0)
         cfg = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48,
                           n_c_enrich=12, max_bank=12, seed=args.seed)
+        if args.tenants:
+            res = run_tenants(args.bench, n=16, rate_qps=40.0,
+                              n_tenants=args.tenants, max_batch=4,
+                              budget_s=budget, seed=args.seed, cfg=cfg)
+            print(json.dumps(res, indent=2))
+            if not res["outputs_identical_per_tenant"]:
+                raise SystemExit("multi-tenant outputs diverge from the "
+                                 "per-tenant offline pipeline")
+            # Fairness smoke: gross starvation shows up as a collapsed Jain
+            # index; the threshold is loose because smoke-sized tails are
+            # noisy on shared CI runners.
+            if not (res["fairness_jain"] >= 0.5):
+                raise SystemExit(
+                    f"Jain fairness collapsed: {res['fairness_jain']:.3f}")
+            print("tenants smoke ok")
+            return
         res = run(args.bench, n=16, rate_qps=40.0, max_batch=4,
                   budget_s=budget, baseline_batch=8, seed=args.seed,
                   cfg=cfg)
@@ -158,6 +258,10 @@ def main():
     res = run(args.bench, n=args.n, rate_qps=args.rate_qps,
               max_batch=args.max_batch, budget_s=args.budget_s,
               seed=args.seed)
+    res["tenants_scenario"] = run_tenants(
+        args.bench, n=args.n, rate_qps=args.rate_qps,
+        n_tenants=args.tenants or 4, max_batch=args.max_batch,
+        budget_s=args.budget_s, seed=args.seed)
     print(json.dumps(res, indent=2))
     s, b = res["server"], res["batch32_baseline"]
     print(f"\nserver: {s['qps']:.1f} q/s, plan p99 "
@@ -169,6 +273,13 @@ def main():
           f"identical: {res['outputs_identical']} | "
           f"p99 under {res['budget_s']:.1f}s budget: "
           f"{res['p99_under_budget']}")
+    tn = res["tenants_scenario"]
+    print(f"tenants ({tn['n_tenants']}, same aggregate load): "
+          f"max per-tenant plan p99 {tn['max_tenant_p99_s'] * 1e3:.0f} ms "
+          f"vs single-stream {tn['baseline_single_stream_p99_s'] * 1e3:.0f}"
+          f" ms | Jain {tn['fairness_jain']:.3f} | per-tenant identical: "
+          f"{tn['outputs_identical_per_tenant']} | no p99 regression: "
+          f"{tn['no_tenant_p99_regression']}")
     for p in save_bench("server", res, headline=True):
         print(f"wrote {p}")
 

@@ -17,6 +17,7 @@ Benchmarks → paper artifacts:
   serve             (ours)       batched tuning-service throughput
   runtime           (ours)       batched runtime re-optimization service
   server            (ours)       streaming-admission server latency/throughput
+  server_tenants    (ours)       multi-tenant fairness + per-tenant p99/Jain
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -94,6 +95,8 @@ def main() -> None:
         "runtime": lambda: [bench_runtime.run(
             b, n_queries=32 if args.full else 16) for b in benches],
         "server": lambda: [bench_server.run(
+            b, n=64 if args.full else 32) for b in benches],
+        "server_tenants": lambda: [bench_server.run_tenants(
             b, n=64 if args.full else 32) for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,

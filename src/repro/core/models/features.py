@@ -29,13 +29,39 @@ from ...queryengine.plan import OP_TYPES, Operator, Query
 
 __all__ = ["PRED_DIM", "OP_FEAT_DIM", "LAPPE_K", "encode_ops",
            "lap_positional_encoding", "GraphBatch", "featurize_subq",
-           "featurize_plan", "batch_graphs"]
+           "featurize_plan", "batch_graphs", "contention_gamma"]
 
 PRED_DIM = 8
 LAPPE_K = 4
 OP_FEAT_DIM = len(OP_TYPES) + 2 + PRED_DIM
 
 _HASH_SEED = 1234
+
+# Contention-feature scales (γ, paper §4.3): log-task / log-work pressure of
+# co-running stages, sibling count, and stage depth.  One definition shared
+# by trace collection (training distribution) and runtime serving (inference
+# distribution) — the feature is only meaningful if both sides compute it
+# identically.
+GAMMA_TASK_SCALE = 10.0
+GAMMA_WORK_SCALE = 10.0
+GAMMA_SIB_SCALE = 4.0
+GAMMA_DEPTH_SCALE = 8.0
+
+
+def contention_gamma(sib_tasks, sib_work, n_sib, depth) -> np.ndarray:
+    """γ contention vector(s): (..., 4) from broadcastable pressure stats.
+
+    ``sib_tasks`` / ``sib_work`` aggregate the task count and task-seconds
+    of the stages co-running with the modeled stage; ``n_sib`` counts them;
+    ``depth`` is the stage's depth in its query DAG.
+    """
+    t, w, s, d = np.broadcast_arrays(
+        np.asarray(sib_tasks, np.float64), np.asarray(sib_work, np.float64),
+        np.asarray(n_sib, np.float64), np.asarray(depth, np.float64))
+    return np.stack([np.log1p(t) / GAMMA_TASK_SCALE,
+                     np.log1p(w) / GAMMA_WORK_SCALE,
+                     s / GAMMA_SIB_SCALE,
+                     d / GAMMA_DEPTH_SCALE], -1)
 
 
 @functools.lru_cache(maxsize=65536)

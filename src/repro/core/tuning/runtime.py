@@ -42,7 +42,62 @@ from .spark_space import theta_c_space, theta_p_space, theta_s_space
 
 __all__ = ["RuntimeOptimizerBackend", "ScoreRequest", "score_requests",
            "weighted_pick_batch", "sample_candidate_pools", "fusion_key",
-           "make_runtime_optimizers"]
+           "make_runtime_optimizers", "stage_pressure", "structural_gamma",
+           "structural_pressure"]
+
+# Reference partition size for the γ task-pressure proxy: the runtime does
+# not know a co-running stage's final partition count (it depends on that
+# stage's own θ decisions), so pressure is measured against a fixed
+# 128 MB advisory partition — θ-independent, hence deterministic and
+# identical however requests are batched.
+GAMMA_REF_PART_BYTES = 128e6
+
+
+def stage_pressure(subq: SubQ) -> Tuple[float, float]:
+    """(task, work) pressure proxy of one stage, from its true statistics.
+
+    Tasks ≈ input bytes over the reference partition size; work ≈ input GB
+    weighted by the stage CPU weight (the simulator's c_* coefficients are
+    O(seconds/GB), so this lands on the task-seconds scale the trace-time γ
+    was computed on).
+    """
+    b = float(sum(subq.input_bytes))
+    tasks = max(1.0, b / GAMMA_REF_PART_BYTES)
+    work = (b / 1e9) * float(subq.cpu_weight)
+    return tasks, work
+
+
+def structural_pressure(query: Query) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-stage raw contention sums: ((m, 3) [tasks, work, n_sib], (m,) d).
+
+    A stage's concurrent companions are its same-depth siblings — the
+    stages a scheduler would run alongside it — mirroring the trace-time
+    definition (:func:`repro.queryengine.trace.collect_traces`), but with
+    statistics-based pressure proxies (:func:`stage_pressure`) instead of
+    simulated task counts, so the sums are available *before* execution
+    and depend only on the query.
+    """
+    depths = query.subq_depths()
+    m = query.n_subqs
+    pres = np.asarray([stage_pressure(sq) for sq in query.subqs], np.float64)
+    d = np.asarray([depths[i] for i in range(m)], np.float64)
+    raw = np.zeros((m, 3), np.float64)
+    for i in range(m):
+        sib = [j for j in range(m) if d[j] == d[i] and j != i]
+        raw[i] = [pres[sib, 0].sum() if sib else 0.0,
+                  pres[sib, 1].sum() if sib else 0.0, len(sib)]
+    return raw, d
+
+
+def structural_gamma(query: Query) -> np.ndarray:
+    """(m, 4) per-stage γ from the query's own co-running stages.
+
+    Depends only on the query, so it is bit-identical however the serving
+    layer slices or fuses requests — the parity-preserving default.
+    """
+    from ...core.models.features import contention_gamma
+    raw, d = structural_pressure(query)
+    return contention_gamma(raw[:, 0], raw[:, 1], raw[:, 2], d)
 
 
 def fusion_key(rq: "ScoreRequest") -> tuple:
@@ -69,8 +124,20 @@ def sample_candidate_pools(seed: int, n_candidates: int
 
 
 def weighted_pick_batch(Fs: Sequence[np.ndarray],
-                        weights: Tuple[float, float]) -> List[int]:
+                        weights) -> List[int]:
     """Weighted-best row index per candidate objective set.
+
+    ``weights`` is one (2,) preference vector shared by every set, or a
+    per-set (R, 2) stack — the multi-tenant serving shape, where each
+    request carries its tenant's preference.  Per-set weights fuse by
+    distinct weight row; every pick normalizes and scores within its own
+    candidate set only, so on the numpy routing (the CPU default) grouping
+    never changes any set's winner: a single-tenant batch resolves
+    bit-identically to the shared-weights path.  Above the env-gated
+    kernel thresholds the usual f32 caveat (below) additionally applies to
+    the *group size*: splitting by weight row shrinks the fused score
+    volume, which can route a group to numpy f64 where the homogeneous
+    batch would hit the f32 kernel.
 
     Per set: dominated rows are dropped (``pareto_mask_fast`` — the Pallas
     ``pareto_filter`` kernel above ``REPRO_PARETO_KERNEL_MIN_N``), all rows
@@ -88,6 +155,21 @@ def weighted_pick_batch(Fs: Sequence[np.ndarray],
     if R == 0:
         return []
     w = np.asarray(weights, np.float64)
+    if w.ndim == 2:
+        if w.shape[0] != R:
+            raise ValueError(
+                f"got {w.shape[0]} weight rows for {R} candidate sets")
+        groups: Dict[tuple, List[int]] = {}
+        for r, row in enumerate(map(tuple, w.tolist())):
+            groups.setdefault(row, []).append(r)
+        if len(groups) == 1:
+            return weighted_pick_batch(Fs, next(iter(groups)))
+        out = [0] * R
+        for row, idxs in groups.items():
+            for i, j in zip(idxs, weighted_pick_batch([Fs[i] for i in idxs],
+                                                      row)):
+                out[i] = j
+        return out
     # Dominance prefiltering only pays when the set is large enough to hit
     # the Pallas kernel; below the threshold the weighted argmin alone is
     # already exact (a dominated row cannot win the weighted sum).
@@ -138,12 +220,22 @@ class RuntimeOptimizerBackend:
         cost: CostModel = DEFAULT_COST,
         seed: int = 0,
         pools: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+        gamma_by_stage: Optional[np.ndarray] = None,
     ):
+        """``gamma_by_stage`` is the (m, 4) per-stage contention vector fed
+        to model-backed re-scoring.  ``None`` (the default) derives it with
+        :func:`structural_gamma` when any model is attached — the paper's
+        §4.3 γ features, no longer zeroed at runtime; pass an explicit
+        ``np.zeros((m, 4))`` to restore the zeroed-γ behavior."""
         self.query = query
         self.cost = cost
         self.weights = weights
         self.model_subq = model_subq
         self.model_qs = model_qs
+        if gamma_by_stage is None and (model_subq is not None
+                                       or model_qs is not None):
+            gamma_by_stage = structural_gamma(query)
+        self.gamma_by_stage = gamma_by_stage
         self.seed_theta_p = seed_theta_p
         self.seed_theta_s = seed_theta_s
         self.cs, self.ps, self.ss = (theta_c_space(), theta_p_space(),
@@ -212,10 +304,14 @@ class RuntimeOptimizerBackend:
         # model drops it (θc ⊕ θs).
         return np.concatenate([tcu, tsu], -1)
 
-    def nondecision(self, subq: SubQ) -> np.ndarray:
-        """Runtime non-decision vector: α from *true* statistics."""
+    def nondecision(self, subq: SubQ,
+                    gamma: Optional[np.ndarray] = None) -> np.ndarray:
+        """Runtime non-decision vector: α from *true* statistics, γ from
+        the request (live contention) or the backend's per-stage default."""
+        if gamma is None and self.gamma_by_stage is not None:
+            gamma = self.gamma_by_stage[subq.sq_id]
         return make_nondecision(
-            _alpha_stats(subq.input_rows, subq.input_bytes))
+            _alpha_stats(subq.input_rows, subq.input_bytes), gamma=gamma)
 
     def objectives(self, lat: np.ndarray, io: np.ndarray) -> np.ndarray:
         return np.stack(
@@ -231,6 +327,7 @@ class ScoreRequest:
     theta_p: np.ndarray          # (np_rows, 9) raw; 1 row when pinned
     theta_s: np.ndarray          # (ns_rows, 2) raw; 1 row when pinned
     decision: str                # "lqp" | "qs"
+    gamma: Optional[np.ndarray] = None   # (4,) live-contention override
 
     @property
     def n(self) -> int:
@@ -291,7 +388,7 @@ def _score_model_group(reqs: Sequence[ScoreRequest], members: List[int],
         rq = reqs[i]
         b = rq.backend
         emb = model.embed(b.query, rq.subq.sq_id)
-        nond = b.nondecision(rq.subq)
+        nond = b.nondecision(rq.subq, gamma=rq.gamma)
         thetas.append(b.model_theta(rq, n))
         embs.append(np.broadcast_to(emb, (n, emb.shape[0])))
         nonds.append(np.broadcast_to(nond, (n, nond.shape[0])))
@@ -330,13 +427,14 @@ def make_runtime_optimizers(
     cost: CostModel = DEFAULT_COST,
     seed: int = 0,
     pools: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    gamma_by_stage: Optional[np.ndarray] = None,
 ):
     """Build (lqp_optimizer, qs_optimizer) callbacks for ``run_with_aqe``."""
     b = RuntimeOptimizerBackend(
         query, theta_c_raw, seed_theta_p=seed_theta_p,
         seed_theta_s=seed_theta_s, model_subq=model_subq, model_qs=model_qs,
         weights=weights, n_candidates=n_candidates, cost=cost, seed=seed,
-        pools=pools)
+        pools=pools, gamma_by_stage=gamma_by_stage)
 
     def lqp_optimizer(*, query: Query, subq: SubQ, theta_c: np.ndarray,
                       theta_p: np.ndarray) -> Optional[np.ndarray]:

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.models.features import contention_gamma
 from ..core.tuning.spark_space import (theta_c_space, theta_p_space,
                                        theta_s_space)
 from .plan import Query
@@ -125,10 +126,7 @@ def collect_traces(
                          if sib else np.zeros(n))
             sib_work = (np.sum([sim.per_subq[j].task_seconds for j in sib], 0)
                         if sib else np.zeros(n))
-            gamma = np.stack([
-                np.log1p(sib_tasks) / 10.0, np.log1p(sib_work) / 10.0,
-                np.full(n, float(len(sib)) / 4.0),
-                np.full(n, float(d) / 8.0)], -1)
+            gamma = contention_gamma(sib_tasks, sib_work, len(sib), d)
 
             rows["qi"].append(np.full(n, qi))
             rows["si"].append(np.full(n, sq.sq_id))

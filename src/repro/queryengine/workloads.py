@@ -26,7 +26,8 @@ from .plan import Operator, Query, SubQ, cbo_estimate
 __all__ = [
     "Table", "TPCH_TABLES", "TPCDS_TABLES",
     "make_query", "make_benchmark", "parametric_variants", "default_workload",
-    "serving_stream", "ArrivalModel", "StreamRequest",
+    "serving_stream", "ArrivalModel", "StreamRequest", "TenantSpec",
+    "multi_tenant_stream",
 ]
 
 
@@ -325,6 +326,73 @@ class StreamRequest:
     rid: int                 # position in the stream (stable request id)
     query: Query
     arrival_s: float         # simulated-clock arrival time
+    tenant: str = "default"  # issuing tenant (multi-tenant admission)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of a multi-tenant serving deployment.
+
+    Carries both halves of tenancy: the *client side* (an independent
+    seeded arrival process — each tenant is its own open-loop stream) and
+    the *server side* admission policy (preference weights for the MOO
+    picks, a weighted-fair share, a priority tier, and an optional
+    per-tenant solve budget overriding the server default).  UDAO-style
+    cost/performance preferences are per-user by nature; the spec is where
+    a user's ``weights`` live.
+    """
+    name: str
+    weights: Optional[Tuple[float, float]] = None  # None → server default
+    arrivals: ArrivalModel = ArrivalModel()
+    share: float = 1.0               # DRR weight within the priority tier
+    priority: int = 0                # higher tiers compose first
+    solve_budget_s: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("tenant name must be non-empty")
+        if self.share <= 0:
+            raise ValueError(f"share must be positive, got {self.share}")
+
+
+def _tenant_seed(seed: int, name: str) -> int:
+    """Derived per-tenant stream seed: independent across tenant names."""
+    return int(np.random.SeedSequence(
+        [seed, zlib.crc32(name.encode()) & 0xFFFFFFFF]).generate_state(1)[0]
+        & 0x7FFFFFFF)
+
+
+def multi_tenant_stream(benchmark: str, tenants: Sequence[TenantSpec],
+                        n_per_tenant, *, seed: int = 0, zipf_a: float = 1.3,
+                        n_variants: int = 3, query_seed: int = 0
+                        ) -> List["StreamRequest"]:
+    """Merge per-tenant serving streams into one timed request stream.
+
+    Each tenant draws its own Zipf template mix and its own arrival
+    process (``spec.arrivals``) under a name-derived seed, so tenant
+    populations are independent and individually reproducible; the merged
+    stream is sorted by arrival time with globally unique ``rid``s.
+    ``n_per_tenant`` is one count shared by all tenants or a per-tenant
+    sequence aligned with ``tenants``.
+    """
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    if isinstance(n_per_tenant, (int, np.integer)):
+        counts = [int(n_per_tenant)] * len(tenants)
+    else:
+        counts = [int(n) for n in n_per_tenant]
+        if len(counts) != len(tenants):
+            raise ValueError(
+                f"got {len(counts)} counts for {len(tenants)} tenants")
+    merged: List[StreamRequest] = []
+    for spec, n in zip(tenants, counts):
+        reqs = serving_stream(benchmark, n, seed=_tenant_seed(seed, spec.name),
+                              zipf_a=zipf_a, n_variants=n_variants,
+                              arrivals=spec.arrivals, query_seed=query_seed)
+        merged.extend(dataclasses.replace(r, tenant=spec.name) for r in reqs)
+    merged.sort(key=lambda r: (r.arrival_s, r.tenant, r.rid))
+    return [dataclasses.replace(r, rid=i) for i, r in enumerate(merged)]
 
 
 def serving_stream(benchmark: str, n: int, *, seed: int = 0,

@@ -20,13 +20,19 @@ Streaming (both halves unified):
 * :class:`OptimizerServer` — streaming-admission serving loop: deadline-
   aware micro-batches through ``tune_batch``, AQE generators through one
   shared ``RuntimeSession``, late arrivals admitted mid-session.
+* :class:`TenantScheduler` — multi-tenant admission accounting: per-tenant
+  queues/deadline reserves, deficit-round-robin batch composition,
+  priority tiers with overdue promotion (no starvation).
 """
+from .admission import TenantScheduler, TenantState
 from .cache import CandidatePoolCache, EffectiveSetCache
 from .runtime import RuntimeSession, RuntimeSessionStats
-from .server import OptimizerServer, ServedQuery, ServerConfig, ServerStats
+from .server import (OptimizerServer, ServedQuery, ServerConfig, ServerStats,
+                     jain_index)
 from .service import ResponseCache, TuningService, tune_batch
 
 __all__ = ["EffectiveSetCache", "TuningService", "tune_batch",
            "ResponseCache", "RuntimeSession", "RuntimeSessionStats",
            "CandidatePoolCache", "OptimizerServer", "ServerConfig",
-           "ServedQuery", "ServerStats"]
+           "ServedQuery", "ServerStats", "TenantScheduler", "TenantState",
+           "jain_index"]

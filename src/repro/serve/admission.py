@@ -1,0 +1,196 @@
+"""Multi-tenant admission accounting for the streaming server.
+
+The paper's cloud premise makes tuning *per user*: preference weights are a
+user's cost/performance trade-off (UDAO), and the 1–2 s solve budget is a
+per-request promise the server must keep for every tenant at once.
+:class:`TenantScheduler` owns the waiting-room half of that promise for
+:class:`~repro.serve.server.OptimizerServer`:
+
+* **Per-tenant queues + deadlines.**  Each tenant's requests wait in their
+  own FIFO; the tenant's flush deadline is its oldest request's
+  ``arrival + budget − reserve`` where the reserve is a per-*query* EWMA of
+  recent solve times scaled by the expected batch size.  (Per-query
+  normalization is the PR-4 bugfix: the old whole-batch EWMA let one large
+  batch inflate the reserve applied to subsequent small batches.)
+* **Weighted-fair composition.**  A micro-batch is composed by
+  deficit-round-robin over the tenant queues: every pass credits each
+  waiting tenant ``share / max(shares in tier)`` slots and pops while the
+  credit covers a whole slot, so long-run batch shares converge to the
+  configured ratios without starving fractional shares — and composition
+  always makes progress in O(1) passes per slot, however small a share.
+* **Priority tiers that cannot starve.**  Higher-priority tenants compose
+  first — but any tenant whose head request has passed its deadline is
+  promoted ahead of *all* tiers (oldest first).  A lower tier therefore
+  waits at most its budget while higher tiers burst: preemption bounds
+  latency instead of unbounding it.
+
+The scheduler only orders and accounts — it never touches solver state —
+so per-query *outputs* remain independent of composition (the golden
+determinism invariant); fairness policy shapes latency only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
+
+from ..queryengine.workloads import TenantSpec
+
+__all__ = ["TenantScheduler", "TenantState"]
+
+
+@dataclasses.dataclass
+class TenantState:
+    """Admission state of one tenant (queue + fairness accounting)."""
+
+    name: str
+    weights: Optional[Tuple[float, float]] = None   # None → server default
+    share: float = 1.0
+    priority: int = 0
+    budget_s: float = 1.0
+    reserve_q_s: float = 0.25        # per-query solve-time EWMA
+    deficit: float = 0.0             # DRR credit carried across flushes
+    queue: Deque[Tuple[float, object]] = dataclasses.field(
+        default_factory=deque)       # (arrival_s, item) FIFO
+    n_enqueued: int = 0
+    n_dequeued: int = 0
+    slots_granted: int = 0           # batch slots over the scheduler's life
+
+    @property
+    def waiting(self) -> int:
+        return len(self.queue)
+
+    def head_arrival(self) -> float:
+        return self.queue[0][0] if self.queue else math.inf
+
+
+class TenantScheduler:
+    """Deficit-round-robin admission over per-tenant queues.
+
+    Drives no clock of its own: the server asks ``next_deadline`` when
+    idle, tests ``flush_due``-style conditions itself, and calls
+    ``compose`` to draw one micro-batch.  Unknown tenant names are
+    auto-registered with default policy, so anonymous single-stream
+    traffic needs no configuration.
+    """
+
+    def __init__(self, tenants: Iterable[TenantSpec] = (), *,
+                 budget_s: float = 1.0, reserve_q_s: float = 0.25,
+                 reserve_ewma: float = 0.3):
+        self.default_budget_s = budget_s
+        self.default_reserve_q_s = reserve_q_s
+        self.reserve_ewma = reserve_ewma
+        self._states: Dict[str, TenantState] = {}
+        for spec in tenants:
+            if spec.name in self._states:
+                raise ValueError(f"duplicate tenant spec: {spec.name!r}")
+            self._states[spec.name] = TenantState(
+                name=spec.name, weights=spec.weights, share=spec.share,
+                priority=spec.priority,
+                budget_s=(spec.solve_budget_s if spec.solve_budget_s
+                          is not None else budget_s),
+                reserve_q_s=reserve_q_s)
+
+    # -- registry ------------------------------------------------------------
+    def state(self, name: str) -> TenantState:
+        st = self._states.get(name)
+        if st is None:
+            st = TenantState(name=name, budget_s=self.default_budget_s,
+                             reserve_q_s=self.default_reserve_q_s)
+            self._states[name] = st
+        return st
+
+    def states(self) -> List[TenantState]:
+        return list(self._states.values())
+
+    # -- queueing ------------------------------------------------------------
+    def enqueue(self, name: str, item: object, arrival_s: float) -> None:
+        st = self.state(name)
+        st.queue.append((arrival_s, item))
+        st.n_enqueued += 1
+
+    def total_waiting(self) -> int:
+        return sum(st.waiting for st in self._states.values())
+
+    # -- deadlines -----------------------------------------------------------
+    def _deadline(self, st: TenantState, expected_n: int) -> float:
+        """Latest flush start that still meets ``st``'s head budget."""
+        return (st.head_arrival() + st.budget_s
+                - st.reserve_q_s * max(expected_n, 1))
+
+    def _expected_n(self, cap: int) -> int:
+        return min(max(self.total_waiting(), 1), cap)
+
+    def next_deadline(self, cap: int) -> float:
+        """Earliest flush deadline over all waiting tenants (inf if idle)."""
+        n = self._expected_n(cap)
+        return min((self._deadline(st, n)
+                    for st in self._states.values() if st.queue),
+                   default=math.inf)
+
+    def deadline_due(self, now: float, cap: int) -> bool:
+        return now >= self.next_deadline(cap)
+
+    # -- batch composition ---------------------------------------------------
+    def compose(self, now: float, cap: int) -> List[Tuple[str, object]]:
+        """Draw one micro-batch of at most ``cap`` items.
+
+        Overdue heads first (any tier, oldest arrival first — the
+        no-starvation guarantee), then priority tiers high→low with
+        deficit-round-robin inside each tier.  Per-tenant slot grants are
+        recorded in :attr:`TenantState.slots_granted`; their sum always
+        equals the number of items returned (conservation).
+        """
+        picked: List[Tuple[str, object]] = []
+        expected = self._expected_n(cap)
+        while len(picked) < cap:
+            over = [st for st in self._states.values()
+                    if st.queue and self._deadline(st, expected) <= now]
+            if not over:
+                break
+            st = min(over, key=lambda s: (s.head_arrival(), s.name))
+            picked.append(self._pop(st))
+        while len(picked) < cap:
+            busy = [st for st in self._states.values() if st.queue]
+            if not busy:
+                break
+            tier = max(st.priority for st in busy)
+            tier_states = sorted((s for s in busy if s.priority == tier),
+                                 key=lambda s: s.name)
+            # Credits are normalized by the tier's largest share: ratios are
+            # preserved (a common factor) and the largest-share tenant
+            # reaches a whole slot every pass, so composing one slot costs
+            # O(1) passes even for arbitrarily small (but valid) shares.
+            qmax = max(st.share for st in tier_states)
+            for st in tier_states:
+                st.deficit += st.share / qmax
+                while st.deficit >= 1.0 and st.queue and len(picked) < cap:
+                    picked.append(self._pop(st))
+                    st.deficit -= 1.0
+                if not st.queue:
+                    st.deficit = 0.0       # standard DRR: no banked credit
+        return picked
+
+    def _pop(self, st: TenantState) -> Tuple[str, object]:
+        _, item = st.queue.popleft()
+        st.n_dequeued += 1
+        st.slots_granted += 1
+        return st.name, item
+
+    # -- solve-time accounting ----------------------------------------------
+    def note_solve(self, dt: float, n: int,
+                   tenant_names: Iterable[str]) -> None:
+        """Fold one micro-batch solve of ``n`` queries into the reserves.
+
+        The EWMA tracks *per-query* solve time (``dt / n``) so a large
+        batch cannot inflate the reserve later applied to a small one; the
+        deadline scales it back up by the expected batch size.
+        """
+        dt_q = dt / max(n, 1)
+        a = self.reserve_ewma
+        for name in set(tenant_names):
+            st = self.state(name)      # auto-registers off the OLD default
+            st.reserve_q_s = (1 - a) * st.reserve_q_s + a * dt_q
+        self.default_reserve_q_s = ((1 - a) * self.default_reserve_q_s
+                                    + a * dt_q)

@@ -126,7 +126,7 @@ class EffectiveSetCache:
 
 
 class CandidatePoolCache:
-    """Shared runtime candidate pools keyed by (seed, n_candidates).
+    """Shared runtime candidate pools keyed by (seed, n_candidates, scope).
 
     The pools are query-independent LHS draws
     (:func:`~repro.core.tuning.runtime.sample_candidate_pools`), so every
@@ -135,21 +135,28 @@ class CandidatePoolCache:
     per-query backend samples for the same seed.  Entries above
     ``max_entries`` are LRU-evicted (an evicted pool is simply redrawn on
     the next request, bit-identically — eviction never changes results).
+
+    ``scope`` is the multi-tenant isolation dimension: a streaming server
+    passes the tenant id, so one tenant's entries are never handed to
+    another even under capacity pressure or per-tenant seed overrides.
+    Pools for the same ``(seed, n_candidates)`` are bit-identical across
+    scopes (the draw ignores the scope), so scoping costs only duplicate
+    storage, never changed results.
     """
 
     def __init__(self, max_entries: int = 64):
         self.max_entries = max_entries
-        self._pools: "OrderedDict[Tuple[int, int], Tuple[np.ndarray, np.ndarray]]" = OrderedDict()
+        self._pools: "OrderedDict[Tuple, Tuple[np.ndarray, np.ndarray]]" = OrderedDict()
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
         return len(self._pools)
 
-    def get(self, seed: int, n_candidates: int
+    def get(self, seed: int, n_candidates: int, scope=None
             ) -> Tuple[np.ndarray, np.ndarray]:
         from ..core.tuning.runtime import sample_candidate_pools  # lazy cycle
-        key = (seed, n_candidates)
+        key = (seed, n_candidates, scope)
         pools = self._pools.get(key)
         if pools is None:
             self.misses += 1

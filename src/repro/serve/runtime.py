@@ -49,6 +49,13 @@ Seeds flow from the compile-time layer: a
 :class:`CompileTimeResult` objects whose per-subQ θp/θs become the runtime
 candidate seeds and whose aggregated submission copies
 (``core/tuning/aggregation.py``) initialize the live θp/θs.
+
+Multi-tenant serving: every entry may carry its own preference vector
+(``admit(..., weights=...)``) — fused picks resolve per-entry weights
+through :func:`weighted_pick_batch`'s per-set path — and model-backed
+re-scoring consumes the paper's §4.3 contention features γ
+(``gamma_mode``: structural per-query siblings by default, live
+open-entry-set pressure opt-in, or zeroed).
 """
 from __future__ import annotations
 
@@ -58,10 +65,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.models.features import contention_gamma
 from ..core.models.perf_model import PerfModel
 from ..core.tuning.compile_time import CompileTimeResult
 from ..core.tuning.runtime import (RuntimeOptimizerBackend, fusion_key,
-                                   score_requests, weighted_pick_batch)
+                                   score_requests, stage_pressure,
+                                   structural_pressure, weighted_pick_batch)
 from ..queryengine.aqe import (AQEPlanState, AQEResult, aqe_request_stream)
 from ..queryengine.plan import Query
 from ..queryengine.simulator import (CostModel, DEFAULT_COST, SubQSim,
@@ -105,6 +114,9 @@ class _Entry:
     realized: Optional[np.ndarray] = None    # algorithms realized in the sim
     rng: Optional[np.random.Generator] = None
     tag: object = None                       # caller handle (e.g. server rid)
+    weights: Optional[tuple] = None          # per-entry (tenant) preference
+    gamma_raw: Optional[np.ndarray] = None   # (m, 3) intra-query γ sums
+    gamma_depths: Optional[np.ndarray] = None  # (m,) stage depths
 
     @property
     def done(self) -> bool:
@@ -131,7 +143,25 @@ class RuntimeSession:
         seed: int = 0,
         prune: bool = True,
         pool_cache: Optional[CandidatePoolCache] = None,
+        gamma_mode: str = "structural",
     ):
+        """``gamma_mode`` controls the §4.3 contention features the model
+        backends consume (the oracle backend ignores γ entirely):
+
+        * ``"structural"`` (default) — per-stage γ from the query's own
+          same-depth sibling stages (:func:`structural_gamma`): nonzero,
+          matches the trace-collection definition, and depends only on the
+          query — so serving output stays bit-identical to the offline
+          pipeline however the stream is sliced.
+        * ``"live"`` — structural γ *plus* cross-query pressure from the
+          open entry set at each fusion round (co-running queries'
+          outstanding stages).  Adaptive to real concurrency, but decisions
+          then depend on batch composition: the bit-identity guarantee is
+          deliberately traded away.
+        * ``"off"`` — γ zeroed (the pre-PR-4 behavior).
+        """
+        if gamma_mode not in ("off", "structural", "live"):
+            raise ValueError(f"unknown gamma_mode: {gamma_mode!r}")
         self.model_subq = model_subq
         self.model_qs = model_qs
         self.weights = weights
@@ -139,6 +169,7 @@ class RuntimeSession:
         self.cost = cost
         self.seed = seed
         self.prune = prune
+        self.gamma_mode = gamma_mode
         self.pool_cache = pool_cache if pool_cache is not None \
             else CandidatePoolCache()
         self.last_batch = RuntimeSessionStats()
@@ -157,6 +188,8 @@ class RuntimeSession:
         *,
         rng: Optional[np.random.Generator] = None,
         tag: object = None,
+        weights: Optional[Tuple[float, float]] = None,
+        pool_scope: object = None,
     ) -> _Entry:
         """Join ``query`` to the running session (between fusion rounds).
 
@@ -165,17 +198,32 @@ class RuntimeSession:
         the live θp/θs.  Admission order only affects row order inside fused
         calls — never any query's decisions — so joining a running session
         yields the same plan as joining a fresh one.
+
+        ``weights`` is the entry's own preference vector (a tenant's MOO
+        weights); ``None`` inherits the session default, reproducing the
+        single-stream behavior bit-identically.  ``pool_scope`` scopes the
+        candidate-pool cache entry (tenant isolation; the draw itself is
+        scope-independent).
         """
+        w = tuple(weights) if weights is not None else tuple(self.weights)
+        has_model = self.model_subq is not None or self.model_qs is not None
+        gamma = None                                  # backend auto/none
+        if self.gamma_mode == "off":
+            gamma = np.zeros((query.n_subqs, 4), np.float64)
         backend = RuntimeOptimizerBackend(
             query, ct.theta_c, seed_theta_p=ct.theta_p_sub,
             seed_theta_s=ct.theta_s_sub, model_subq=self.model_subq,
-            model_qs=self.model_qs, weights=self.weights,
+            model_qs=self.model_qs, weights=w,
             cost=self.cost,
-            pools=self.pool_cache.get(self.seed, self.n_candidates))
+            pools=self.pool_cache.get(self.seed, self.n_candidates,
+                                      scope=pool_scope),
+            gamma_by_stage=gamma)
         gen = aqe_request_stream(query, ct.theta_c, ct.theta_p0, ct.theta_s0,
                                  prune=self.prune)
         e = _Entry(query=query, ct=ct, backend=backend, gen=gen, rng=rng,
-                   tag=tag)
+                   tag=tag, weights=w)
+        if self.gamma_mode == "live" and has_model:
+            e.gamma_raw, e.gamma_depths = structural_pressure(query)
         self._step(e, None)
         self._active.append(e)
         self.admitted_total += 1
@@ -203,14 +251,34 @@ class RuntimeSession:
         reqs, cands = [], []
         for e in waiting:
             sr, cand = e.backend.request_for(e.pending)
+            if e.gamma_raw is not None:
+                sr.gamma = self._live_gamma(e, sr.subq.sq_id)
             reqs.append(sr)
             cands.append(cand)
         self.fused_total += len({fusion_key(sr) for sr in reqs}) + 1  # + pick
         Fs = score_requests(reqs)
-        picks = weighted_pick_batch(Fs, self.weights)
+        picks = weighted_pick_batch(
+            Fs, np.asarray([e.weights for e in waiting], np.float64))
         for e, cand, j in zip(waiting, cands, picks):
             self._step(e, cand[j])
         return len(waiting)
+
+    def _live_gamma(self, e: _Entry, sq_id: int) -> np.ndarray:
+        """γ for one request under ``gamma_mode="live"``: the entry's
+        intra-query sibling sums plus the pressure of every *other* active
+        entry's outstanding stage (the open entry set, right now)."""
+        cross_t = cross_w = 0.0
+        n_co = 0
+        for o in self._active:
+            if o is e or o.pending is None:
+                continue
+            t, w = stage_pressure(o.pending.subq)
+            cross_t += t
+            cross_w += w
+            n_co += 1
+        raw = e.gamma_raw[sq_id]
+        return contention_gamma(raw[0] + cross_t, raw[1] + cross_w,
+                                raw[2] + n_co, e.gamma_depths[sq_id])
 
     def retire_ready(self) -> List[_Entry]:
         """Remove and return entries whose planning pass has finished.

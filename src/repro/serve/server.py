@@ -4,30 +4,49 @@ The paper's cloud constraint is a 1–2 s solving budget per query arriving
 in an *online stream*; PR 1/PR 2 built the two optimizer halves for fixed,
 fully-formed batches.  :class:`OptimizerServer` closes the gap: it accepts
 queries as they arrive (a simulated-clock event queue fed by
-:func:`~repro.queryengine.workloads.serving_stream` with an
-:class:`~repro.queryengine.workloads.ArrivalModel`), accumulates them into
-deadline-aware micro-batches, routes each micro-batch through the batched
-compile-time solve (:meth:`TuningService.tune_batch`) and then drives the
-resulting AQE generators through one long-lived, shared
+:func:`~repro.queryengine.workloads.serving_stream` or
+:func:`~repro.queryengine.workloads.multi_tenant_stream`), accumulates
+them into deadline-aware micro-batches, routes each micro-batch through
+the batched compile-time solve (:meth:`TuningService.tune_batch`) and then
+drives the resulting AQE generators through one long-lived, shared
 :class:`RuntimeSession` — admitting late arrivals into the *running*
 session between fusion rounds instead of holding them for the next batch.
+
+Multi-tenant admission (PR 4): requests carry a tenant id and each tenant
+(:class:`~repro.queryengine.workloads.TenantSpec`) brings its own MOO
+preference weights, weighted-fair share, priority tier, and solve budget.
+Waiting-room policy lives in
+:class:`~repro.serve.admission.TenantScheduler`: per-tenant queues with
+per-tenant deadline reserves, deficit-round-robin micro-batch composition,
+and priority tiers bounded by overdue promotion (no tenant starves).
+Tenant weights thread through ``tune_batch`` (per-query weights +
+tenant-scoped response-cache keys) and into per-entry runtime picks; the
+candidate-pool cache is tenant-scoped too.  Fairness shapes *latency*
+only: per-query outputs equal the offline pipeline solved under that
+tenant's weights, so tenants can never perturb each other's plans.
 
 Admission policy (deadline-aware micro-batching):
 
 * a micro-batch flushes when ``max_batch`` requests are waiting, or
-* when the simulated clock reaches the oldest waiting request's flush
-  deadline ``arrival + solve_budget_s − reserve``, where the reserve is an
-  EWMA of recent micro-batch solve times (seeded by ``solve_reserve_s``) —
-  i.e. the latest moment solving can start and still make the budget.
+* when the simulated clock reaches some tenant's flush deadline
+  ``oldest arrival + tenant budget − reserve``, where the reserve is a
+  per-query EWMA of recent solve times scaled by the expected batch size
+  (seeded by ``solve_reserve_s``) — i.e. the latest moment solving can
+  start and still make that tenant's budget.
 
 Clock model: arrivals advance on the simulated clock; optimizer work
 (compile solves, fusion rounds, realization) advances it by measured wall
 time.  Batch composition therefore depends on timing — but no per-query
 *output* does: compile-time results are per-query deterministic (caches
-are exact) and every runtime decision depends only on the query's own
-candidate rows, so the served plans and objectives are bit-identical to
-the offline ``tune_batch`` → ``RuntimeSession.run_batch`` pipeline on the
-oracle backend, however the stream is sliced.
+are exact and tenant-scoped) and every runtime decision depends only on
+the query's own candidate rows and its tenant's weights, so the served
+plans and objectives are bit-identical to the offline ``tune_batch`` →
+``RuntimeSession.run_batch`` pipeline per tenant — on the oracle backend
+and on the model backend under the default deterministic γ
+(``gamma_mode="structural"``) — however the stream is sliced.  (As
+everywhere in the serving stack, the guarantee is stated for the default
+numpy/float64 kernel routing; forcing the f32 Pallas kernels via the env
+thresholds carries the usual f32 tie caveat.)
 
 Caches (:class:`~repro.serve.cache.EffectiveSetCache`,
 :class:`~repro.serve.service.ResponseCache`,
@@ -40,7 +59,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -49,11 +67,13 @@ from ..core.models.perf_model import PerfModel
 from ..core.moo.hmooc import HMOOCConfig
 from ..core.tuning.compile_time import CompileTimeResult
 from ..queryengine.aqe import AQEResult
-from ..queryengine.workloads import StreamRequest
+from ..queryengine.workloads import StreamRequest, TenantSpec
+from .admission import TenantScheduler
 from .runtime import RuntimeSession
 from .service import TuningService
 
-__all__ = ["OptimizerServer", "ServerConfig", "ServedQuery", "ServerStats"]
+__all__ = ["OptimizerServer", "ServerConfig", "ServedQuery", "ServerStats",
+           "jain_index"]
 
 Weights = Tuple[float, float]
 
@@ -63,9 +83,12 @@ class ServerConfig:
     """Admission/scheduling policy of the streaming server."""
     max_batch: int = 8                 # flush when this many requests wait
     solve_budget_s: float = 1.0        # the paper's per-query cloud budget
-    solve_reserve_s: float = 0.25      # initial solve-time reserve (EWMA seed)
-    reserve_ewma: float = 0.3          # EWMA weight of the newest batch solve
+    solve_reserve_s: float = 0.25      # initial per-QUERY solve reserve (EWMA
+                                       # seed; deadlines scale it by the
+                                       # expected batch size)
+    reserve_ewma: float = 0.3          # EWMA weight of the newest solve
     admit_mid_session: bool = True     # late arrivals join the running session
+    isolate_tenant_pools: bool = True  # tenant-scoped candidate-pool entries
 
 
 @dataclasses.dataclass
@@ -74,6 +97,7 @@ class ServedQuery:
     rid: int
     request: StreamRequest
     arrival_s: float
+    tenant: str = "default"
     admitted_s: float = math.nan       # micro-batch flush began
     compiled_s: float = math.nan       # compile-time θ ready
     finished_s: float = math.nan       # final plan + objectives realized
@@ -100,6 +124,7 @@ class ServerStats:
     rounds: int = 0                    # fusion rounds over the run
     makespan_s: float = 0.0            # last finish − first arrival (sim)
     wall_time_s: float = 0.0           # real time spent in serve()
+    tenant_slots: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def qps(self) -> float:
@@ -110,7 +135,8 @@ class OptimizerServer:
     """Unified streaming server over both optimizer halves.
 
     One instance is a long-lived process: :meth:`serve` can be called on
-    successive streams and every cache keeps amortizing.
+    successive streams and every cache — and the tenant scheduler's
+    fairness/reserve state — keeps amortizing.
     """
 
     def __init__(
@@ -122,15 +148,20 @@ class OptimizerServer:
         model: Optional[PerfModel] = None,
         tuning: Optional[TuningService] = None,
         session: Optional[RuntimeSession] = None,
+        tenants: Sequence[TenantSpec] = (),
     ):
-        """``weights`` parameterizes the default-built session, ``cfg`` and
-        ``model`` the default-built *compile-time* service (``model`` is the
-        §5.1 subQ objective model; the default session stays on the oracle
-        runtime backend).  For model-backed runtime re-scoring pass a
-        prebuilt ``session`` with ``model_subq``/``model_qs`` set; prebuilt
-        ``tuning``/``session`` objects also share caches across servers.
-        Mixing a prebuilt object with the knobs it subsumes is rejected
-        rather than silently resolved."""
+        """``weights`` parameterizes the default-built session and is the
+        fallback preference for tenants that configure none; ``cfg`` and
+        ``model`` parameterize the default-built *compile-time* service
+        (``model`` is the §5.1 subQ objective model; the default session
+        stays on the oracle runtime backend).  For model-backed runtime
+        re-scoring pass a prebuilt ``session`` with
+        ``model_subq``/``model_qs`` set; prebuilt ``tuning``/``session``
+        objects also share caches across servers.  ``tenants`` registers
+        per-tenant admission policy (weights, share, priority, budget);
+        tenant ids not listed get default policy on first sight.  Mixing a
+        prebuilt object with the knobs it subsumes is rejected rather than
+        silently resolved."""
         if tuning is not None and (cfg is not None or model is not None):
             raise ValueError(
                 "pass cfg/model or a prebuilt tuning service, not both")
@@ -145,22 +176,16 @@ class OptimizerServer:
         self.session = session if session is not None else RuntimeSession(
             weights=weights if weights is not None else (0.9, 0.1))
         self.weights = self.session.weights
-        self._reserve_s = config.solve_reserve_s
+        self.scheduler = TenantScheduler(
+            tenants, budget_s=config.solve_budget_s,
+            reserve_q_s=config.solve_reserve_s,
+            reserve_ewma=config.reserve_ewma)
         self.last_run = ServerStats()
 
-    # -- scheduling ----------------------------------------------------------
-    def _flush_deadline(self, waiting: "deque[ServedQuery]") -> float:
-        if not waiting:
-            return math.inf
-        return (waiting[0].arrival_s + self.config.solve_budget_s
-                - self._reserve_s)
-
-    def _note_solve(self, dt: float, n: int) -> None:
-        # EWMA of the per-batch solve wall time: the reserve the deadline
-        # policy holds back so a flush still meets the budget.
-        del n
-        a = self.config.reserve_ewma
-        self._reserve_s = (1 - a) * self._reserve_s + a * dt
+    # -- per-tenant policy ---------------------------------------------------
+    def tenant_weights(self, tenant: str) -> Weights:
+        w = self.scheduler.state(tenant).weights
+        return tuple(w) if w is not None else tuple(self.weights)
 
     # -- main loop -----------------------------------------------------------
     def serve(self, requests: Sequence[StreamRequest]) -> List[ServedQuery]:
@@ -172,34 +197,44 @@ class OptimizerServer:
         """
         wall0 = time.perf_counter()
         cfgv = self.config
+        sched = self.scheduler
         if self.session.n_active:
             raise RuntimeError(
                 f"serve() requires an idle session; {self.session.n_active} "
                 "entries are already active (admitted outside this server)")
+        if sched.total_waiting():
+            raise RuntimeError(
+                "serve() requires an empty admission queue; "
+                f"{sched.total_waiting()} requests are already waiting")
         served: Dict[int, ServedQuery] = {
-            r.rid: ServedQuery(rid=r.rid, request=r, arrival_s=r.arrival_s)
+            r.rid: ServedQuery(rid=r.rid, request=r, arrival_s=r.arrival_s,
+                               tenant=r.tenant)
             for r in requests}
         if len(served) != len(requests):
             raise ValueError(
                 f"duplicate rids in request stream: {len(requests)} requests "
                 f"but {len(served)} distinct rids")
-        incoming = deque(sorted(served.values(), key=lambda s: (s.arrival_s,
-                                                                s.rid)))
-        waiting: "deque[ServedQuery]" = deque()
-        in_flight: Dict[int, ServedQuery] = {}   # rid -> admitted, unrealized
+        incoming = sorted(served.values(),
+                          key=lambda s: (s.arrival_s, s.rid))
+        pos = 0                                # next unadmitted arrival
+        in_flight: Dict[int, ServedQuery] = {}  # rid -> admitted, unrealized
         t = incoming[0].arrival_s if incoming else 0.0
         first_arrival = t
         n_batches = 0
         n_joined_running = 0
         flushes_since_round = 0
         rounds0 = self.session.rounds_total
+        slots0 = {st.name: st.slots_granted for st in sched.states()}
 
         def admit_arrived(now: float) -> None:
-            while incoming and incoming[0].arrival_s <= now:
-                waiting.append(incoming.popleft())
+            nonlocal pos
+            while pos < len(incoming) and incoming[pos].arrival_s <= now:
+                s = incoming[pos]
+                sched.enqueue(s.tenant, s, s.arrival_s)
+                pos += 1
 
         def flush_due(now: float) -> bool:
-            if not waiting:
+            if not sched.total_waiting():
                 return False
             if self.session.n_active:
                 # A session is live: join it eagerly between fusion rounds
@@ -208,13 +243,13 @@ class OptimizerServer:
                 # arrivals can never starve in-flight queries of the rounds
                 # they need to finish.
                 return cfgv.admit_mid_session and flushes_since_round < 1
-            if len(waiting) >= cfgv.max_batch:
+            if sched.total_waiting() >= cfgv.max_batch:
                 return True
-            if not incoming:
+            if pos >= len(incoming):
                 # End of stream: nothing else will arrive, waiting longer
                 # only adds latency.
                 return True
-            return now >= self._flush_deadline(waiting)
+            return sched.deadline_due(now, cfgv.max_batch)
 
         def finish(cohort, results, now: float) -> None:
             for e, res in zip(cohort, results):
@@ -224,25 +259,30 @@ class OptimizerServer:
                 in_flight.pop(s.rid, None)
 
         admit_arrived(t)
-        while incoming or waiting or in_flight:
+        while pos < len(incoming) or sched.total_waiting() or in_flight:
             if flush_due(t):
-                batch = [waiting.popleft()
-                         for _ in range(min(cfgv.max_batch, len(waiting)))]
+                batch = [s for _, s in sched.compose(t, cfgv.max_batch)]
                 n_batches += 1
                 flushes_since_round += 1
                 for s in batch:
                     s.admitted_s = t
+                batch_w = [self.tenant_weights(s.tenant) for s in batch]
                 t0 = time.perf_counter()
-                cts = self.tuning.tune_batch([s.request.query for s in batch],
-                                             self.weights)
-                self._note_solve(time.perf_counter() - t0, len(batch))
+                cts = self.tuning.tune_batch(
+                    [s.request.query for s in batch], batch_w,
+                    tenants=[s.tenant for s in batch])
+                sched.note_solve(time.perf_counter() - t0, len(batch),
+                                 (s.tenant for s in batch))
                 joined_running = self.session.n_active > 0
-                for s, ct in zip(batch, cts):
+                for s, ct, w in zip(batch, cts, batch_w):
                     s.ct = ct
                     s.joined_running = joined_running
                     if joined_running:
                         n_joined_running += 1
-                    self.session.admit(s.request.query, ct, tag=s.rid)
+                    self.session.admit(
+                        s.request.query, ct, tag=s.rid, weights=w,
+                        pool_scope=(s.tenant if cfgv.isolate_tenant_pools
+                                    else None))
                     in_flight[s.rid] = s
                 # The clock covers the whole window — the solve plus each
                 # query's initial AQE planning step inside admit().
@@ -263,8 +303,9 @@ class OptimizerServer:
                 admit_arrived(t)
                 continue
             # Idle: jump the simulated clock to the next event.
-            nxt = min(incoming[0].arrival_s if incoming else math.inf,
-                      self._flush_deadline(waiting))
+            nxt = min(incoming[pos].arrival_s if pos < len(incoming)
+                      else math.inf,
+                      sched.next_deadline(cfgv.max_batch))
             if not math.isfinite(nxt):
                 break
             t = max(t, nxt)
@@ -277,16 +318,24 @@ class OptimizerServer:
             n_joined_running=n_joined_running,
             rounds=self.session.rounds_total - rounds0,
             makespan_s=(max(finished) - first_arrival) if finished else 0.0,
-            wall_time_s=time.perf_counter() - wall0)
+            wall_time_s=time.perf_counter() - wall0,
+            tenant_slots={st.name: st.slots_granted - slots0.get(st.name, 0)
+                          for st in sched.states()
+                          if st.slots_granted - slots0.get(st.name, 0)})
         return out
 
     # -- reporting -----------------------------------------------------------
     def latency_report(self, served: Sequence[ServedQuery]) -> dict:
-        """p50/p99/max of the two latency metrics plus throughput."""
+        """p50/p99/max of the two latency metrics plus throughput.
+
+        With multi-tenant traffic the report adds a per-tenant breakdown
+        and the Jain fairness index over per-tenant p99 plan latency
+        (1.0 = perfectly even tails across tenants).
+        """
         plan = np.array([s.plan_latency_s for s in served], np.float64)
         solve = np.array([s.solve_latency_s for s in served], np.float64)
         st = self.last_run
-        return {
+        rep = {
             "n_queries": st.n_queries,
             "n_micro_batches": st.n_micro_batches,
             "n_joined_running": st.n_joined_running,
@@ -296,6 +345,31 @@ class OptimizerServer:
             "solve_latency_s": _pcts(solve),
             "plan_latency_s": _pcts(plan),
         }
+        names = sorted({s.tenant for s in served})
+        if len(names) > 1 or (names and names != ["default"]):
+            per = {}
+            for name in names:
+                sub = [s for s in served if s.tenant == name]
+                per[name] = {
+                    "n_queries": len(sub),
+                    "batch_slots": st.tenant_slots.get(name, 0),
+                    "solve_latency_s": _pcts(np.array(
+                        [s.solve_latency_s for s in sub], np.float64)),
+                    "plan_latency_s": _pcts(np.array(
+                        [s.plan_latency_s for s in sub], np.float64)),
+                }
+            rep["tenants"] = per
+            rep["fairness_jain"] = jain_index(
+                [per[n]["plan_latency_s"]["p99"] for n in names])
+        return rep
+
+
+def jain_index(x: Sequence[float]) -> float:
+    """Jain fairness index (Σx)² / (n·Σx²): 1.0 = perfectly even."""
+    a = np.asarray(list(x), np.float64)
+    if a.size == 0 or not np.isfinite(a).all() or (a == 0).all():
+        return math.nan
+    return float(a.sum() ** 2 / (a.size * (a * a).sum()))
 
 
 def _pcts(x: np.ndarray) -> dict:

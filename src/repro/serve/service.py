@@ -50,13 +50,17 @@ class BatchStats:
 
 
 class ResponseCache:
-    """Bounded LRU of finished results keyed by (fingerprint, weights).
+    """Bounded LRU of finished results keyed by (tenant, fingerprint,
+    weights).
 
     Exact by construction: the solver is deterministic, so an identical
     request (same statistics, weights, config, model) maps to a
     bit-identical :class:`CompileTimeResult`.  Shareable: a streaming
     server passes one instance to its :class:`TuningService` so dedup
-    spans micro-batches and admission epochs, not just one batch.
+    spans micro-batches and admission epochs, not just one batch.  The
+    tenant id is part of the key, so one tenant's weighted picks are never
+    served to another — even before the preference weights (also in the
+    key) would force a miss.
     """
 
     def __init__(self, max_entries: int = 4096):
@@ -119,10 +123,21 @@ class TuningService:
         self,
         queries: Sequence[Query],
         weights: Union[Weights, Sequence[Weights]] = (0.9, 0.1),
+        *,
+        tenants: Optional[Sequence[Optional[str]]] = None,
     ) -> List[CompileTimeResult]:
-        """Solve the compile-time MOO for every query; aligned results."""
+        """Solve the compile-time MOO for every query; aligned results.
+
+        ``tenants`` (aligned with ``queries``) scopes response-cache
+        entries per tenant: a multi-tenant server passes each request's
+        tenant id so cached weighted picks never cross tenants.  ``None``
+        keeps the anonymous single-stream behavior.
+        """
         t0 = time.perf_counter()
         per_q_weights = _expand_weights(weights, len(queries))
+        if tenants is not None and len(tenants) != len(queries):
+            raise ValueError(
+                f"got {len(tenants)} tenant ids for {len(queries)} queries")
         results: List[Optional[CompileTimeResult]] = [None] * len(queries)
         n_solved = 0
         for qi, (q, w) in enumerate(zip(queries, per_q_weights)):
@@ -132,7 +147,8 @@ class TuningService:
             # ResponseCache can be shared across differently-configured
             # services (the model object in the key also pins it live,
             # keeping identity-hashed entries unambiguous).
-            key = (q.qid, query_fingerprint(q), w, self.cfg, self.cost,
+            key = (tenants[qi] if tenants is not None else None,
+                   q.qid, query_fingerprint(q), w, self.cfg, self.cost,
                    self.model)
             if self._results is not None:
                 hit = self._results.get(key)

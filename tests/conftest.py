@@ -47,3 +47,43 @@ def smoke_model_factory():
         return cfg, _cached_build_model(cfg)
 
     return factory
+
+
+_perf_model_cache: Dict[tuple, dict] = {}
+
+
+def build_smoke_perf_models(n_queries: int = 8, n_conf: int = 6,
+                            steps: int = 40) -> dict:
+    """Tiny *trained* subQ/QS PerfModels for model-backed serving tests.
+
+    One short training run per test session (memoized by size): enough
+    optimization for the models to be a real learned backend — nonzero,
+    input-sensitive predictions — while staying tier-1 fast.  The slow
+    suite passes larger sizes for a better-fit variant.
+    """
+    key = (n_queries, n_conf, steps)
+    if key not in _perf_model_cache:
+        import dataclasses as _dc
+
+        from repro.core.models.gtn import GTNConfig
+        from repro.core.models.training import build_dataset, train_model
+        from repro.queryengine.trace import collect_traces
+        from repro.queryengine.workloads import default_workload
+
+        queries = default_workload("tpch", 2)[:n_queries]
+        traces = collect_traces(queries, n_conf, seed=0)
+        gtn = GTNConfig(d_model=16, n_heads=2, n_layers=1, d_ff=32)
+        models = {}
+        for kind, seed in (("subq", 0), ("qs", 1)):
+            ds, cfg = build_dataset(traces, kind)
+            cfg = _dc.replace(cfg, gtn=gtn, hidden=(16,))
+            models[kind] = train_model(ds, cfg, steps=steps, batch=128,
+                                       seed=seed)
+        _perf_model_cache[key] = models
+    return _perf_model_cache[key]
+
+
+@pytest.fixture(scope="session")
+def smoke_perf_models():
+    """{"subq": PerfModel, "qs": PerfModel}, trained once per session."""
+    return build_smoke_perf_models()

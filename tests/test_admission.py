@@ -1,0 +1,325 @@
+"""Fairness/starvation properties of multi-tenant admission.
+
+Property sweeps (via ``_hypothesis_compat``: real hypothesis when
+installed, fixed-seed sweep otherwise) drive :class:`TenantScheduler`
+directly with synthetic items — no solver in the loop — so adversarial
+tenant mixes are cheap to explore:
+
+* conservation — per-tenant batch-slot accounting sums exactly to every
+  batch's size, nothing is lost or double-counted, per-tenant FIFO order
+  is preserved;
+* no starvation — whatever the priority/share mix, a tenant's head
+  request is composed into the very next batch once its deadline passes
+  (overdue promotion outranks priority tiers), so no tenant waits
+  unboundedly while another flushes;
+* weighted fairness — deficit-round-robin long-run batch shares track the
+  configured share ratios;
+* the per-query reserve EWMA regression (PR-4 bugfix): one large batch
+  must not inflate the deadline reserve applied to subsequent small
+  batches.
+
+Server-level tests then check single-tenant traffic through the
+multi-tenant machinery reproduces the anonymous PR-3 path bit-identically,
+and that mixed-tenant streams serve every request with conserved
+accounting.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.moo.hmooc import HMOOCConfig
+from repro.queryengine.workloads import (ArrivalModel, StreamRequest,
+                                         TenantSpec, multi_tenant_stream,
+                                         serving_stream)
+from repro.serve import (OptimizerServer, RuntimeSession, ServerConfig,
+                         TenantScheduler, TuningService)
+
+import dataclasses
+
+CFG = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48, n_c_enrich=12,
+                  max_bank=12, seed=3)
+WEIGHTS = (0.9, 0.1)
+
+
+def _random_specs(rng, n_tenants):
+    return [TenantSpec(name=f"t{i}",
+                       share=float(rng.choice([0.5, 1.0, 2.0, 3.0])),
+                       priority=int(rng.integers(0, 3)),
+                       solve_budget_s=float(rng.choice([0.5, 1.0, 2.0])))
+            for i in range(n_tenants)]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler properties (synthetic items, no solver)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 8))
+def test_conservation_and_fifo(seed, n_tenants, cap):
+    """Random mixes: every batch's size equals the sum of per-tenant slot
+    grants, nothing is lost, and each tenant drains in FIFO order."""
+    rng = np.random.default_rng(seed)
+    specs = _random_specs(rng, n_tenants)
+    sched = TenantScheduler(specs, budget_s=1.0, reserve_q_s=0.1)
+    n_items = int(rng.integers(1, 30))
+    enq = {s.name: [] for s in specs}
+    t = 0.0
+    for k in range(n_items):
+        t += float(rng.exponential(0.05))
+        name = specs[int(rng.integers(0, n_tenants))].name
+        sched.enqueue(name, ("item", name, k), t)
+        enq[name].append(("item", name, k))
+    deq = {s.name: [] for s in specs}
+    now = t
+    n_flushes = 0
+    while sched.total_waiting():
+        n_flushes += 1
+        assert n_flushes < 10 * n_items + 10, "scheduler failed to drain"
+        before = {s.name: s.slots_granted for s in sched.states()}
+        picked = sched.compose(now, cap)
+        assert 0 < len(picked) <= cap
+        grants = {s.name: s.slots_granted - before[s.name]
+                  for s in sched.states()}
+        assert sum(grants.values()) == len(picked)       # conservation
+        for name, item in picked:
+            deq[name].append(item)
+        now += 0.01
+    assert deq == enq                                    # FIFO per tenant
+    for s in sched.states():
+        assert s.n_dequeued == s.n_enqueued == len(enq[s.name])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_no_starvation_overdue_beats_priority(seed, cap):
+    """A low-priority head whose deadline has passed is composed into the
+    very next batch, no matter how much higher-priority work floods in."""
+    rng = np.random.default_rng(seed)
+    low = TenantSpec(name="low", priority=0,
+                     share=float(rng.choice([0.5, 1.0])),
+                     solve_budget_s=1.0)
+    high = TenantSpec(name="high", priority=int(rng.integers(1, 4)),
+                      share=3.0, solve_budget_s=10.0)
+    sched = TenantScheduler([low, high], reserve_q_s=0.0)
+    sched.enqueue("low", "starved", 0.0)
+    for k in range(50):
+        sched.enqueue("high", f"h{k}", 0.0)
+    # Before low's deadline, priority preempts: batches are pure high.
+    picked = sched.compose(0.5, cap)
+    assert all(name == "high" for name, _ in picked)
+    # At/after the deadline the low head is promoted ahead of every tier.
+    picked = sched.compose(1.0, cap)
+    assert picked[0] == ("low", "starved")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 4))
+def test_drr_shares_track_configured_ratio(seed, share_a, share_b):
+    """Two saturated same-tier tenants split batch slots ~ share_a:share_b
+    (no overdue promotion in play: budgets far in the future)."""
+    del seed
+    a = TenantSpec(name="a", share=float(share_a), solve_budget_s=1e9)
+    b = TenantSpec(name="b", share=float(share_b), solve_budget_s=1e9)
+    sched = TenantScheduler([a, b], reserve_q_s=0.0)
+    n = 50 * (share_a + share_b)
+    for k in range(n):
+        sched.enqueue("a", k, 0.0)
+        sched.enqueue("b", k, 0.0)
+    grants = []
+    while len(grants) < n:
+        grants.extend(name for name, _ in sched.compose(0.0, 8))
+    got_a = grants[:n].count("a")
+    want_a = n * share_a / (share_a + share_b)
+    # DRR quantization error is bounded by one quantum per pass.
+    assert abs(got_a - want_a) <= 8 + share_a + share_b
+
+
+def test_tiny_share_composes_in_bounded_passes():
+    """A valid-but-minuscule share must not stall composition: credits are
+    normalized per pass by the tier's largest share, so each slot costs
+    O(1) passes even at share=1e-9 (regression: the unnormalized loop
+    needed ~1/share passes)."""
+    sched = TenantScheduler([TenantSpec(name="tiny", share=1e-9,
+                                        solve_budget_s=1e9)],
+                            reserve_q_s=0.0)
+    for k in range(4):
+        sched.enqueue("tiny", k, 0.0)
+    assert [i for _, i in sched.compose(0.0, 4)] == [0, 1, 2, 3]
+    # Ratios still respected when a tiny share competes with a normal one.
+    sched2 = TenantScheduler([TenantSpec(name="tiny", share=1e-9,
+                                         solve_budget_s=1e9),
+                              TenantSpec(name="big", share=1.0,
+                                         solve_budget_s=1e9)],
+                             reserve_q_s=0.0)
+    for k in range(20):
+        sched2.enqueue("tiny", k, 0.0)
+        sched2.enqueue("big", k, 0.0)
+    grants = [n for n, _ in sched2.compose(0.0, 8)]
+    assert grants.count("big") >= 7       # tiny earns ≪ one slot per pass
+
+
+def test_priority_tier_preempts_composition():
+    sched = TenantScheduler([TenantSpec(name="hi", priority=2,
+                                        solve_budget_s=1e9),
+                             TenantSpec(name="lo", priority=0,
+                                        solve_budget_s=1e9)],
+                            reserve_q_s=0.0)
+    for k in range(6):
+        sched.enqueue("hi", k, 0.0)
+        sched.enqueue("lo", k, 0.0)
+    picked = sched.compose(0.0, 4)
+    assert [name for name, _ in picked] == ["hi"] * 4
+    # Once the high tier drains, the low tier gets the whole batch.
+    sched.compose(0.0, 2)
+    picked = sched.compose(0.0, 4)
+    assert [name for name, _ in picked] == ["lo"] * 4
+
+
+def test_unknown_tenant_auto_registered_with_defaults():
+    sched = TenantScheduler([], budget_s=2.0, reserve_q_s=0.125)
+    sched.enqueue("walk-in", "x", 1.0)
+    st_ = sched.state("walk-in")
+    assert st_.budget_s == 2.0 and st_.reserve_q_s == 0.125
+    assert st_.weights is None and st_.priority == 0
+    assert sched.compose(100.0, 4) == [("walk-in", "x")]
+
+
+def test_duplicate_tenant_specs_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        TenantScheduler([TenantSpec(name="a"), TenantSpec(name="a")])
+
+
+# ---------------------------------------------------------------------------
+# Per-query reserve EWMA (regression: batch size used to be ignored)
+# ---------------------------------------------------------------------------
+
+def test_reserve_normalized_per_query():
+    """One large batch must not inflate the reserve applied to a later
+    single-query flush: the EWMA tracks dt/n, not raw batch dt."""
+    sched = TenantScheduler([], budget_s=1.0, reserve_q_s=0.25,
+                            reserve_ewma=0.3)
+    sched.note_solve(8.0, 8, ["a"])            # 1.0 s per query
+    st_ = sched.state("a")
+    assert st_.reserve_q_s == pytest.approx(0.7 * 0.25 + 0.3 * 1.0)
+    # The buggy whole-batch EWMA would have been 0.7*0.25 + 0.3*8.0 = 2.575,
+    # pushing a single waiting query's deadline before its own arrival.
+    sched.enqueue("a", "x", arrival_s=10.0)
+    dl = sched.next_deadline(cap=8)
+    assert dl == pytest.approx(10.0 + 1.0 - st_.reserve_q_s)
+    assert dl > 10.0                            # still after arrival
+    # With more waiting, the deadline scales the per-query reserve back up
+    # by the expected batch size.
+    for k in range(3):
+        sched.enqueue("a", k, arrival_s=10.0)
+    assert sched.next_deadline(cap=8) == pytest.approx(
+        10.0 + 1.0 - 4 * st_.reserve_q_s)
+
+
+def test_reserve_scales_only_own_tenant():
+    sched = TenantScheduler([], budget_s=1.0, reserve_q_s=0.2)
+    sched.note_solve(4.0, 4, ["a"])
+    assert sched.state("a").reserve_q_s > 0.2
+    # Fresh tenants seed from the updated global default, not the old seed.
+    assert sched.state("b").reserve_q_s == sched.default_reserve_q_s
+
+
+# ---------------------------------------------------------------------------
+# Server level: single-tenant ≡ PR-3, mixed mixes all served + conserved
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def solo_stream():
+    return serving_stream("tpch", 10, seed=4,
+                          arrivals=ArrivalModel(kind="poisson",
+                                                rate_qps=40.0))
+
+
+def test_single_tenant_reproduces_anonymous_path(solo_stream):
+    """The same stream served anonymously and under a named single tenant
+    (same weights) yields bit-identical outputs and identical admission
+    accounting — the multi-tenant machinery is a no-op at n_tenants=1."""
+    anon = OptimizerServer(config=ServerConfig(max_batch=4), weights=WEIGHTS,
+                           cfg=CFG)
+    a = anon.serve(solo_stream)
+    named_reqs = [dataclasses.replace(r, tenant="alice")
+                  for r in solo_stream]
+    named = OptimizerServer(
+        config=ServerConfig(max_batch=4), weights=WEIGHTS, cfg=CFG,
+        tenants=[TenantSpec(name="alice", weights=WEIGHTS)])
+    b = named.serve(named_reqs)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.result.theta_p_eff,
+                                      y.result.theta_p_eff)
+        np.testing.assert_array_equal(x.result.theta_s_eff,
+                                      y.result.theta_s_eff)
+        np.testing.assert_array_equal(x.result.final_join,
+                                      y.result.final_join)
+        np.testing.assert_array_equal(x.result.sim.cost, y.result.sim.cost)
+    # (Batch *composition* depends on measured wall time and may differ
+    # run to run; the invariant is that outputs and accounting do not.)
+    assert sum(anon.last_run.tenant_slots.values()) == len(solo_stream)
+    assert named.last_run.tenant_slots == {"alice": len(solo_stream)}
+
+
+def test_mixed_tenant_stream_all_served_and_conserved():
+    specs = [TenantSpec(name="a", weights=(0.9, 0.1), share=2.0,
+                        arrivals=ArrivalModel(rate_qps=30.0)),
+             TenantSpec(name="b", weights=(0.5, 0.5), priority=1,
+                        arrivals=ArrivalModel(rate_qps=30.0)),
+             TenantSpec(name="c", arrivals=ArrivalModel(rate_qps=15.0),
+                        solve_budget_s=0.5)]
+    reqs = multi_tenant_stream("tpch", specs, [5, 4, 3], seed=6)
+    assert len(reqs) == 12
+    assert [r.rid for r in reqs] == list(range(12))
+    srv = OptimizerServer(config=ServerConfig(max_batch=4), weights=WEIGHTS,
+                          cfg=CFG, tenants=specs)
+    served = srv.serve(reqs)
+    assert all(s.result is not None for s in served)
+    assert all(math.isfinite(s.finished_s) for s in served)
+    # Slot accounting conserves across the whole run.
+    assert sum(srv.last_run.tenant_slots.values()) == len(reqs)
+    assert srv.last_run.tenant_slots == {"a": 5, "b": 4, "c": 3}
+    rep = srv.latency_report(served)
+    assert set(rep["tenants"]) == {"a", "b", "c"}
+    assert 0.0 < rep["fairness_jain"] <= 1.0
+    # Tenant "c" (no weights configured) fell back to the server default.
+    assert srv.tenant_weights("c") == WEIGHTS
+
+
+def test_serve_refuses_nonempty_admission_queue(solo_stream):
+    srv = OptimizerServer(config=ServerConfig(max_batch=4), weights=WEIGHTS,
+                          cfg=CFG)
+    srv.scheduler.enqueue("default", "stray", 0.0)
+    with pytest.raises(RuntimeError, match="admission queue"):
+        srv.serve(solo_stream)
+
+
+def test_multi_tenant_stream_validation():
+    with pytest.raises(ValueError, match="duplicate tenant"):
+        multi_tenant_stream("tpch", [TenantSpec(name="x"),
+                                     TenantSpec(name="x")], 2)
+    with pytest.raises(ValueError, match="counts"):
+        multi_tenant_stream("tpch", [TenantSpec(name="x")], [1, 2])
+    with pytest.raises(ValueError, match="share"):
+        TenantSpec(name="x", share=0.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        TenantSpec(name="")
+
+
+def test_multi_tenant_stream_reproducible_and_independent():
+    specs = [TenantSpec(name="a", arrivals=ArrivalModel(rate_qps=10.0)),
+             TenantSpec(name="b", arrivals=ArrivalModel(rate_qps=10.0))]
+    r1 = multi_tenant_stream("tpch", specs, 6, seed=9)
+    r2 = multi_tenant_stream("tpch", specs, 6, seed=9)
+    assert [(r.tenant, r.arrival_s, r.query.qid) for r in r1] == \
+           [(r.tenant, r.arrival_s, r.query.qid) for r in r2]
+    times = [r.arrival_s for r in r1]
+    assert times == sorted(times)
+    # Tenants draw distinct populations/timings (independent seed streams).
+    a = [r.query.qid for r in r1 if r.tenant == "a"]
+    b = [r.query.qid for r in r1 if r.tenant == "b"]
+    assert a != b
+    assert all(isinstance(r, StreamRequest) for r in r1)

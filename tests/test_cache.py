@@ -163,3 +163,81 @@ def test_bank_reuse_not_restored_as_exact():
     st = svc.cache.stats()
     assert st["approx_hits"] == 2      # v2 again: still approximate
     assert st["hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant cache isolation (tenant/preference key dimensions)
+# ---------------------------------------------------------------------------
+
+def test_response_cache_isolates_tenants_with_different_weights():
+    """Two tenants, byte-identical query structure, different preference
+    vectors: neither may be served the other's weighted pick."""
+    rc = ResponseCache()
+    svc = TuningService(cfg=CFG, response_cache=rc)
+    q = make_query("tpch", 5, variant=1)
+    ra = svc.tune_batch([q], (0.9, 0.1), tenants=["a"])[0]
+    rb = svc.tune_batch([q], (0.1, 0.9), tenants=["b"])[0]
+    assert rc.hits == 0 and rc.misses == 2 and len(rc) == 2
+    # The picks genuinely differ (different WUN choice under the weights)
+    # or at minimum live under different entries; warm replays stay scoped.
+    ra2 = svc.tune_batch([q], (0.9, 0.1), tenants=["a"])[0]
+    rb2 = svc.tune_batch([q], (0.1, 0.9), tenants=["b"])[0]
+    assert rc.hits == 2
+    np.testing.assert_array_equal(ra.theta_c, ra2.theta_c)
+    np.testing.assert_array_equal(rb.theta_c, rb2.theta_c)
+
+
+def test_response_cache_isolates_tenants_even_with_same_weights():
+    """The tenant id is its own key dimension: identical requests from
+    different tenants never share an entry (structural no-leak guarantee,
+    not merely a consequence of differing weights)."""
+    rc = ResponseCache()
+    svc = TuningService(cfg=CFG, response_cache=rc)
+    q = make_query("tpch", 5, variant=1)
+    ra = svc.tune_batch([q], (0.9, 0.1), tenants=["a"])[0]
+    rb = svc.tune_batch([q], (0.9, 0.1), tenants=["b"])[0]
+    assert rc.misses == 2 and rc.hits == 0 and len(rc) == 2
+    # Isolation is structural, results still deterministic-identical.
+    np.testing.assert_array_equal(ra.front, rb.front)
+    # Same tenant, same request: exact hit.
+    svc.tune_batch([q], (0.9, 0.1), tenants=["a"])
+    assert rc.hits == 1
+
+
+def test_same_tenant_keeps_hit_taxonomy():
+    """Tenancy must not disturb the effective-set cache's exact/structure
+    hit taxonomy — Algorithm 1 artifacts depend only on statistics and are
+    safe to share across tenants."""
+    svc = TuningService(cfg=CFG, dedupe=False)
+    svc.tune_batch([make_query("tpch", 3, variant=1)], tenants=["a"])
+    svc.tune_batch([make_query("tpch", 3, variant=1)], tenants=["a"])
+    svc.tune_batch([make_query("tpch", 3, variant=2)], tenants=["a"])
+    st = svc.cache.stats()
+    assert st["hits"] == 1 and st["structure_hits"] == 1 \
+        and st["approx_hits"] == 0
+    # A second tenant's identical traffic also reuses the statistics-keyed
+    # artifacts (no tenant data lives in them): variant 2 is now the stored
+    # fingerprint, so tenant "b" gets an exact hit on it.
+    svc.tune_batch([make_query("tpch", 3, variant=2)], tenants=["b"])
+    assert svc.cache.stats()["hits"] == 2
+
+
+def test_candidate_pool_cache_scope_isolation():
+    cache = CandidatePoolCache()
+    pa = cache.get(0, 8, scope="a")
+    pb = cache.get(0, 8, scope="b")
+    assert cache.misses == 2 and len(cache) == 2   # scoped entries
+    # The draw ignores the scope: isolation costs storage, never results.
+    np.testing.assert_array_equal(pa[0], pb[0])
+    np.testing.assert_array_equal(pa[1], pb[1])
+    assert cache.get(0, 8, scope="a") is pa and cache.hits == 1
+    # Unscoped remains its own entry (anonymous single-stream traffic).
+    cache.get(0, 8)
+    assert cache.misses == 3
+
+
+def test_tenants_arg_validated():
+    svc = TuningService(cfg=CFG)
+    q = make_query("tpch", 3, variant=1)
+    with pytest.raises(ValueError, match="tenant ids"):
+        svc.tune_batch([q], tenants=["a", "b"])

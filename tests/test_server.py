@@ -262,6 +262,59 @@ def test_bench_server_smoke_meets_budget():
     assert res["p99_under_budget"]
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant golden determinism (oracle backend)
+# ---------------------------------------------------------------------------
+
+def test_multi_tenant_per_tenant_parity_oracle():
+    """N tenants with different preferences and arrival rates sharing one
+    server: each tenant's output is bit-identical to the offline pipeline
+    solved under that tenant's own weights — fairness shapes latency, never
+    plans."""
+    from repro.queryengine.workloads import TenantSpec, multi_tenant_stream
+    specs = [TenantSpec(name="lat", weights=(0.9, 0.1), share=2.0,
+                        arrivals=ArrivalModel(kind="poisson", rate_qps=30.0)),
+             TenantSpec(name="bal", weights=(0.5, 0.5), priority=1,
+                        arrivals=ArrivalModel(kind="poisson", rate_qps=20.0)),
+             TenantSpec(name="cost", weights=(0.1, 0.9),
+                        arrivals=ArrivalModel(kind="uniform", rate_qps=10.0))]
+    reqs = multi_tenant_stream("tpch", specs, 4, seed=8)
+    srv = OptimizerServer(config=ServerConfig(max_batch=4), weights=WEIGHTS,
+                          cfg=CFG, tenants=specs)
+    served = srv.serve(reqs)
+    for spec in specs:
+        sub = [s for s in served if s.tenant == spec.name]
+        assert len(sub) == 4
+        queries = [s.request.query for s in sub]
+        cts = TuningService(cfg=CFG).tune_batch(queries, spec.weights)
+        ref = RuntimeSession(weights=spec.weights).run_batch(queries, cts)
+        _assert_same_outputs(sub, ref)
+
+
+def test_tenant_weights_actually_change_picks():
+    """Identical query served to latency-heavy and cost-heavy tenants must
+    be solved under each tenant's own weights (equal picks would mean the
+    preference vector was dropped somewhere along the path)."""
+    import dataclasses as _dc
+    from repro.queryengine.workloads import TenantSpec, make_query
+    q = make_query("tpch", 8, variant=1)
+    specs = [TenantSpec(name="lat", weights=(0.99, 0.01)),
+             TenantSpec(name="cost", weights=(0.01, 0.99))]
+    reqs = [StreamRequest(rid=0, query=q, arrival_s=0.0, tenant="lat"),
+            StreamRequest(rid=1, query=q, arrival_s=0.0, tenant="cost")]
+    srv = OptimizerServer(config=ServerConfig(max_batch=2), weights=WEIGHTS,
+                          cfg=CFG, tenants=specs)
+    served = srv.serve(reqs)
+    lat, cost = served[0], served[1]
+    assert lat.ct.choice != cost.ct.choice or not np.array_equal(
+        lat.ct.theta_c, cost.ct.theta_c)
+    # Each matches its own offline solve exactly.
+    for s, w in ((lat, (0.99, 0.01)), (cost, (0.01, 0.99))):
+        ref = TuningService(cfg=CFG).tune_batch([q], w)[0]
+        assert s.ct.choice == ref.choice
+        np.testing.assert_array_equal(s.ct.theta_c, ref.theta_c)
+
+
 def test_query_seed_threads_through():
     base = serving_stream("tpch", 8, seed=2)
     same = serving_stream("tpch", 8, seed=2, query_seed=0)

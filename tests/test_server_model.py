@@ -1,0 +1,245 @@
+"""Model-backed serving parity: the PR-3 golden determinism suite re-run on
+a trained :class:`PerfModel` backend (the path the paper actually serves).
+
+The smoke models come from the session-cached trainer in ``conftest.py``
+(tiny GTN + regressor, brief training on simulator traces) — real learned
+backends, fast enough for tier-1.  The invariants:
+
+* served plans and objectives are **bit-identical** to the offline
+  model-backed ``tune_batch`` → ``RuntimeSession.run_batch`` pipeline,
+  however the stream is sliced (all at once / one at a time / shuffled
+  micro-batches);
+* runtime θs decisions consume **nonzero γ** contention features on the
+  model path (spy on the QS model) — §4.3's γ is no longer zeroed;
+* ``gamma_mode="off"`` restores the zeroed-γ behavior, and
+  ``gamma_mode="live"`` actually injects cross-query open-entry-set
+  pressure (trading away determinism by design);
+* multi-tenant model-backed serving is bit-identical to the offline
+  pipeline *per tenant*, each under its own preference weights.
+
+A larger trained-model variant of the golden parity runs under ``-m slow``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.moo.hmooc import HMOOCConfig
+from repro.queryengine.workloads import (ArrivalModel, TenantSpec,
+                                         multi_tenant_stream, serving_stream)
+from repro.serve import (OptimizerServer, RuntimeSession, ServerConfig,
+                         TuningService)
+
+from conftest import build_smoke_perf_models
+
+CFG = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48, n_c_enrich=12,
+                  max_bank=12, seed=3)
+WEIGHTS = (0.9, 0.1)
+N_STREAM = 8
+
+
+@pytest.fixture(scope="module")
+def models(smoke_perf_models):
+    return smoke_perf_models["subq"], smoke_perf_models["qs"]
+
+
+@pytest.fixture(scope="module")
+def timed_stream():
+    return serving_stream("tpch", N_STREAM, seed=11,
+                          arrivals=ArrivalModel(kind="poisson",
+                                                rate_qps=40.0))
+
+
+@pytest.fixture(scope="module")
+def offline(timed_stream, models):
+    """Offline model-backed reference: compile under the subQ model, run
+    the runtime session under the subQ+QS models."""
+    msub, mqs = models
+    queries = [r.query for r in timed_stream]
+    cts = TuningService(model=msub, cfg=CFG).tune_batch(queries, WEIGHTS)
+    res = RuntimeSession(model_subq=msub, model_qs=mqs,
+                         weights=WEIGHTS).run_batch(queries, cts)
+    return cts, res
+
+
+def _server(models, max_batch, **cfg_kw):
+    msub, mqs = models
+    return OptimizerServer(
+        config=ServerConfig(max_batch=max_batch, **cfg_kw),
+        tuning=TuningService(model=msub, cfg=CFG),
+        session=RuntimeSession(model_subq=msub, model_qs=mqs,
+                               weights=WEIGHTS))
+
+
+def _assert_same_outputs(served, offline_results):
+    for s, ref in zip(served, offline_results):
+        got = s.result
+        np.testing.assert_array_equal(got.theta_p_eff, ref.theta_p_eff)
+        np.testing.assert_array_equal(got.theta_s_eff, ref.theta_s_eff)
+        np.testing.assert_array_equal(got.final_join, ref.final_join)
+        np.testing.assert_array_equal(got.sim.ana_latency, ref.sim.ana_latency)
+        np.testing.assert_array_equal(got.sim.actual_latency,
+                                      ref.sim.actual_latency)
+        np.testing.assert_array_equal(got.sim.io_gb, ref.sim.io_gb)
+        np.testing.assert_array_equal(got.sim.cost, ref.sim.cost)
+        assert got.requests_sent == ref.requests_sent
+        assert got.requests_total == ref.requests_total
+
+
+# ---------------------------------------------------------------------------
+# Golden determinism on the learned backend
+# ---------------------------------------------------------------------------
+
+def test_model_one_at_a_time_matches_offline(timed_stream, offline, models):
+    _, ref = offline
+    served = _server(models, max_batch=1).serve(timed_stream)
+    _assert_same_outputs(served, ref)
+
+
+def test_model_micro_batches_match_offline(timed_stream, offline, models):
+    _, ref = offline
+    served = _server(models, max_batch=3).serve(timed_stream)
+    _assert_same_outputs(served, ref)
+
+
+def test_model_shuffled_micro_batches_match(timed_stream, offline, models):
+    _, ref = offline
+    rng = np.random.default_rng(5)
+    times = np.sort([r.arrival_s for r in timed_stream])
+    perm = rng.permutation(len(timed_stream))
+    shuffled = sorted(
+        (dataclasses.replace(r, arrival_s=float(times[perm[i]]))
+         for i, r in enumerate(timed_stream)),
+        key=lambda r: r.arrival_s)
+    served = _server(models, max_batch=3).serve(shuffled)
+    by_rid = {s.rid: s for s in served}
+    _assert_same_outputs([by_rid[r.rid] for r in timed_stream], ref)
+
+
+def test_multi_tenant_model_backed_per_tenant_parity(models):
+    """Two tenants, distinct preference vectors, one model-backed server:
+    each tenant's served output bit-matches the offline model-backed
+    pipeline solved under that tenant's own weights."""
+    msub, mqs = models
+    specs = [TenantSpec(name="lat", weights=(0.9, 0.1),
+                        arrivals=ArrivalModel(rate_qps=25.0)),
+             TenantSpec(name="cost", weights=(0.2, 0.8), priority=1,
+                        arrivals=ArrivalModel(rate_qps=25.0))]
+    reqs = multi_tenant_stream("tpch", specs, 4, seed=3)
+    srv = OptimizerServer(
+        config=ServerConfig(max_batch=3),
+        tuning=TuningService(model=msub, cfg=CFG),
+        session=RuntimeSession(model_subq=msub, model_qs=mqs,
+                               weights=WEIGHTS),
+        tenants=specs)
+    served = srv.serve(reqs)
+    for spec in specs:
+        sub = [s for s in served if s.tenant == spec.name]
+        assert len(sub) == 4
+        queries = [s.request.query for s in sub]
+        cts = TuningService(model=msub, cfg=CFG).tune_batch(
+            queries, spec.weights)
+        ref = RuntimeSession(model_subq=msub, model_qs=mqs,
+                             weights=spec.weights).run_batch(queries, cts)
+        _assert_same_outputs(sub, ref)
+
+
+# ---------------------------------------------------------------------------
+# γ contention features on the model path
+# ---------------------------------------------------------------------------
+
+class _NondSpy:
+    """Wraps ``model.predict`` and records the nondecision rows it sees."""
+
+    def __init__(self, model, monkeypatch):
+        self.rows = []
+        orig = model.predict
+
+        def wrapped(emb, theta, nond):
+            self.rows.append(np.array(nond, copy=True))
+            return orig(emb, theta, nond)
+
+        monkeypatch.setattr(model, "predict", wrapped)
+
+    @property
+    def gamma(self) -> np.ndarray:
+        return np.concatenate(self.rows)[:, 8:12]
+
+
+def test_qs_decisions_consume_nonzero_gamma(timed_stream, offline, models,
+                                            monkeypatch):
+    _, ref = offline
+    msub, mqs = models
+    spy = _NondSpy(mqs, monkeypatch)
+    served = _server(models, max_batch=3).serve(timed_stream)
+    _assert_same_outputs(served, ref)     # γ is deterministic: parity holds
+    assert spy.rows, "QS model never consulted"
+    g = spy.gamma
+    assert np.isfinite(g).all()
+    assert (np.abs(g).sum(axis=1) > 0).any(), \
+        "runtime θs decisions saw only zeroed γ"
+
+
+def test_gamma_off_restores_zeroed_features(timed_stream, models,
+                                            monkeypatch):
+    msub, mqs = models
+    queries = [r.query for r in timed_stream[:4]]
+    cts = TuningService(model=msub, cfg=CFG).tune_batch(queries, WEIGHTS)
+    spy = _NondSpy(mqs, monkeypatch)
+    RuntimeSession(model_subq=msub, model_qs=mqs, weights=WEIGHTS,
+                   gamma_mode="off").run_batch(queries, cts)
+    assert spy.rows and (spy.gamma == 0).all()
+
+
+def test_gamma_live_adds_cross_query_pressure(timed_stream, models,
+                                              monkeypatch):
+    """Live mode injects open-entry-set pressure: with co-running queries
+    the γ rows the model sees differ from (dominate) the structural ones."""
+    msub, mqs = models
+    queries = [r.query for r in timed_stream[:4]]
+    cts = TuningService(model=msub, cfg=CFG).tune_batch(queries, WEIGHTS)
+
+    spy_s = _NondSpy(mqs, monkeypatch)
+    RuntimeSession(model_subq=msub, model_qs=mqs, weights=WEIGHTS,
+                   gamma_mode="structural").run_batch(queries, cts)
+    g_struct = spy_s.gamma
+
+    spy_l = _NondSpy(mqs, monkeypatch)
+    RuntimeSession(model_subq=msub, model_qs=mqs, weights=WEIGHTS,
+                   gamma_mode="live").run_batch(queries, cts)
+    g_live = spy_l.gamma
+
+    assert g_live.shape[0] > 0
+    # Task/work/sibling pressure can only grow with co-runners...
+    assert g_live[:, :3].sum() > g_struct[:, :3].sum()
+    # ...and at least one scored row actually saw a different vector.
+    n = min(g_live.shape[0], g_struct.shape[0])
+    assert not np.array_equal(g_live[:n], g_struct[:n])
+
+
+def test_invalid_gamma_mode_rejected():
+    with pytest.raises(ValueError, match="gamma_mode"):
+        RuntimeSession(gamma_mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Larger trained-model variant (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_model_parity_larger_trained_models():
+    models_big = build_smoke_perf_models(n_queries=16, n_conf=10, steps=200)
+    msub, mqs = models_big["subq"], models_big["qs"]
+    reqs = serving_stream("tpch", 12, seed=7,
+                          arrivals=ArrivalModel(kind="poisson",
+                                                rate_qps=30.0))
+    queries = [r.query for r in reqs]
+    cts = TuningService(model=msub, cfg=CFG).tune_batch(queries, WEIGHTS)
+    ref = RuntimeSession(model_subq=msub, model_qs=mqs,
+                         weights=WEIGHTS).run_batch(queries, cts)
+    srv = OptimizerServer(
+        config=ServerConfig(max_batch=4),
+        tuning=TuningService(model=msub, cfg=CFG),
+        session=RuntimeSession(model_subq=msub, model_qs=mqs,
+                               weights=WEIGHTS))
+    _assert_same_outputs(srv.serve(reqs), ref)
