@@ -12,13 +12,20 @@ simulated; optimizer work advances the clock by measured wall time):
   admitted into the running session between fusion rounds.
 
 Reports throughput (queries / makespan) and p50/p99/max of the
-admission-to-final-plan latency, plus the compile-solve latency the
-paper's budget is stated against.  Also verifies the streaming path's
-outputs are bit-identical to the offline ``tune_batch`` →
-``RuntimeSession.run_batch`` pipeline.
+arrival-to-final-plan latency, plus the arrival-to-θ compile-solve
+latency the paper's budget is stated against.  Also verifies the
+streaming path's outputs are bit-identical to the offline ``tune_batch``
+→ ``RuntimeSession.run_batch`` pipeline.
+
+``run_overload`` (``--overload``) is the PR-5 overload scenario: one
+tenant per SLO class, aggregate arrival rate swept past the measured
+serving capacity — strict sheds and keeps its p99 ≤ budget, degrade
+resolves via the cheap compile path, best-effort absorbs the queueing,
+and surviving outputs stay bit-identical to the offline pipeline.
 
 Run:  PYTHONPATH=src python benchmarks/bench_server.py
       PYTHONPATH=src python benchmarks/bench_server.py --smoke   # CI
+      PYTHONPATH=src python benchmarks/bench_server.py --overload
 """
 from __future__ import annotations
 
@@ -201,6 +208,200 @@ def run_tenants(bench: str = "tpch", n: int = 64, rate_qps: float = 16.0,
     }
 
 
+def _overload_specs(rate_qps: float, budget_s: float = 1.0,
+                    slo_override: Optional[str] = None):
+    """One tenant per SLO class, equal rates, UDAO-style distinct weights.
+
+    The strict and degrade tenants carry the hard ``budget_s`` promise;
+    the best-effort tenant's budget is soft (10×): it made no latency
+    promise, so its backlog must not flood the overdue-promotion lane and
+    starve the tenants that did.  The strict tenant also sits in a higher
+    priority tier — a tenant paying for a hard SLO composes first, so it
+    sheds only the genuinely unabsorbable excess rather than everything
+    the flooded classes crowd out.  ``slo_override`` builds the
+    counterfactual mix (same names, weights, rates, budgets and
+    priorities, every tenant forced to one class — e.g. all best_effort,
+    the pre-PR-5 behavior)."""
+    return [TenantSpec(
+        name=slo, slo=slo_override if slo_override is not None else slo,
+        weights=TENANT_PREFS[i % len(TENANT_PREFS)],
+        solve_budget_s=(10 * budget_s if slo == "best_effort" else budget_s),
+        priority=1 if slo == "strict" else 0,
+        arrivals=ArrivalModel(kind="poisson", rate_qps=rate_qps / 3))
+        for i, slo in enumerate(("strict", "degrade", "best_effort"))]
+
+
+def measure_capacity(bench: str = "tpch", n: int = 48, max_batch: int = 8,
+                     budget_s: float = 1.0, seed: int = 0,
+                     cfg: Optional[HMOOCConfig] = None) -> float:
+    """Measured warm serving capacity (queries/s) for the overload mix.
+
+    Serves the three-tenant mix (all best-effort — calibration must not
+    shed) at a low rate twice on one server and derives capacity from the
+    *second* pass's recorded per-flush clock charges (total admission
+    window over total queries): the steady-state rate at which the warmed
+    caches absorb this traffic shape.  The overload scenario sweeps the
+    arrival rate past this — a genuinely unabsorbable load, not just a
+    cold-cache transient.
+    """
+    cfg = cfg if cfg is not None else HMOOCConfig(seed=seed, **SERVING_CFG)
+    specs = _overload_specs(8.0, budget_s=budget_s,
+                            slo_override="best_effort")
+    srv = OptimizerServer(
+        config=ServerConfig(max_batch=max_batch, solve_budget_s=budget_s),
+        weights=WEIGHTS, cfg=cfg, tenants=specs)
+    counts = [n // 3 + (1 if i < n % 3 else 0) for i in range(3)]
+    srv.serve(multi_tenant_stream(bench, specs, counts, seed=seed))
+    srv.serve(multi_tenant_stream(bench, specs, counts, seed=seed + 1))
+    windows = srv.last_run.flush_windows
+    busy = sum(dt for dt, _ in windows)
+    return sum(b for _, b in windows) / busy if busy else float("inf")
+
+
+def run_overload(bench: str = "tpch", n: int = 96,
+                 overload_factor: float = 2.0, max_batch: int = 8,
+                 budget_s: float = 1.0, seed: int = 0,
+                 cfg: Optional[HMOOCConfig] = None, check: bool = True,
+                 capacity_qps: Optional[float] = None,
+                 calib_n: int = 48) -> dict:
+    """Overload scenario: arrival rate swept past measured capacity.
+
+    Three tenants — one per SLO class — split an aggregate arrival rate of
+    ``overload_factor ×`` the measured serving capacity.  The server must
+    *adapt* instead of queueing unboundedly: the strict tenant sheds its
+    unmeetable requests and keeps its served p99 plan latency ≤ its
+    budget, the degrade tenant resolves every admission through the cheap
+    compile path (zero fresh Algorithm 1 solves), and the best-effort
+    tenant absorbs the queueing.  Reports per-class shed/degrade rates and
+    goodput, plus per-tenant parity of surviving full-quality queries with
+    the offline pipeline.
+    """
+    cfg = cfg if cfg is not None else HMOOCConfig(seed=seed, **SERVING_CFG)
+    if capacity_qps is None:
+        capacity_qps = measure_capacity(bench, n=calib_n,
+                                        max_batch=max_batch,
+                                        budget_s=budget_s, seed=seed,
+                                        cfg=cfg)
+    rate = overload_factor * capacity_qps
+    specs = _overload_specs(rate, budget_s=budget_s)
+    counts = [n // 3 + (1 if i < n % 3 else 0) for i in range(3)]
+    reqs = multi_tenant_stream(bench, specs, counts, seed=seed)
+
+    # Counterfactual baseline: the identical stream with every tenant
+    # forced best_effort (the pre-PR-5 server: queue unboundedly, blow
+    # budgets silently).  What overload *adaptation* buys is the delta.
+    base_specs = _overload_specs(rate, budget_s=budget_s,
+                                 slo_override="best_effort")
+    base_srv = OptimizerServer(
+        config=ServerConfig(max_batch=max_batch, solve_budget_s=budget_s),
+        weights=WEIGHTS, cfg=cfg, tenants=base_specs)
+    base_rep = base_srv.latency_report(base_srv.serve(reqs))
+
+    srv = OptimizerServer(
+        config=ServerConfig(max_batch=max_batch, solve_budget_s=budget_s),
+        weights=WEIGHTS, cfg=cfg, tenants=specs)
+    # Count Algorithm 1 bank builds during the serve, attributing any that
+    # fire inside the degraded path (every degraded admission resolves via
+    # a response hit or ``TuningService._tune_cheap``): degraded traffic
+    # must trigger exactly zero — cached banks or the Spark defaults only.
+    from repro.core.moo import hmooc as hmooc_mod
+    bank_builds = [0]
+    degraded_bank_builds = [0]
+    orig_opt = hmooc_mod._optimize_rep_banks
+    orig_cheap = srv.tuning._tune_cheap
+
+    def _counting_opt(*a, **kw):
+        bank_builds[0] += 1
+        return orig_opt(*a, **kw)
+
+    def _counting_cheap(*a, **kw):
+        before = bank_builds[0]
+        out = orig_cheap(*a, **kw)
+        degraded_bank_builds[0] += bank_builds[0] - before
+        return out
+
+    hmooc_mod._optimize_rep_banks = _counting_opt
+    srv.tuning._tune_cheap = _counting_cheap
+    try:
+        served = srv.serve(reqs)
+    finally:
+        hmooc_mod._optimize_rep_banks = orig_opt
+        srv.tuning._tune_cheap = orig_cheap
+    rep = srv.latency_report(served)
+    totals = srv.tuning.totals
+
+    survivors_identical = True
+    if check:
+        # Surviving full-quality queries bit-match the offline pipeline
+        # under their tenant's weights — shedding/degrading the rest never
+        # perturbed them.
+        for spec in specs:
+            sub = [s for s in served
+                   if s.tenant == spec.name and s.status == "served"]
+            if not sub:
+                continue
+            queries = [s.request.query for s in sub]
+            cts = TuningService(cfg=cfg).tune_batch(queries, spec.weights)
+            ref = RuntimeSession(weights=spec.weights).run_batch(queries, cts)
+            if not _identical(sub, ref):
+                survivors_identical = False
+
+    strict = rep["tenants"]["strict"]
+    degrade = rep["tenants"]["degrade"]
+    base_strict_p99 = base_rep["tenants"]["strict"]["plan_latency_s"]["p99"]
+    return {
+        "bench": bench,
+        "n_queries": len(reqs),
+        "capacity_qps": capacity_qps,
+        "overload_factor": overload_factor,
+        "aggregate_rate_qps": rate,
+        "max_batch": max_batch,
+        "budget_s": budget_s,
+        "tenants": rep["tenants"],
+        "goodput": rep["goodput"],
+        "shed_rate": rep["shed_rate"],
+        "degrade_rate": rep["degrade_rate"],
+        "fairness_jain": rep["fairness_jain"],
+        "strict_p99_plan_latency_s": strict["plan_latency_s"]["p99"],
+        "strict_p99_under_budget":
+            (not math.isfinite(strict["plan_latency_s"]["p99"]))
+            or strict["plan_latency_s"]["p99"] <= strict["budget_s"],
+        "strict_shed_rate": strict["shed_rate"],
+        "strict_goodput": strict["goodput"],
+        "degrade_rate_degrade_tenant": degrade["degrade_rate"],
+        "cheap_solves": totals.n_cheap,
+        "default_theta_solves": totals.n_default_theta,
+        "full_solves": totals.n_solved,
+        "fresh_bank_builds": bank_builds[0],
+        "degraded_bank_builds": degraded_bank_builds[0],
+        "degraded_zero_fresh_solves": degraded_bank_builds[0] == 0,
+        "survivors_identical": survivors_identical,
+        "strict_n_finished": strict["n_finished"],
+        # Every request reached exactly one terminal outcome with the
+        # right artifacts: shed ⇒ rejected unsolved, otherwise a realized
+        # result — nothing lost, nothing half-served.
+        "outcomes_accounted": all(
+            (s.status == "shed" and s.ct is None and s.result is None)
+            or (s.status in ("served", "degraded")
+                and s.result is not None and math.isfinite(s.finished_s))
+            for s in served),
+        "best_effort_all_served":
+            rep["tenants"]["best_effort"]["n_finished"]
+            == rep["tenants"]["best_effort"]["n_queries"],
+        # The no-adaptation counterfactual (all tenants best_effort): the
+        # strict tenant's tail without shedding, and overall goodput.
+        "baseline_no_slo": {
+            "strict_p99_plan_latency_s": base_strict_p99,
+            "goodput": base_rep["goodput"],
+            "plan_p99_s": base_rep["plan_latency_s"]["p99"],
+        },
+        "strict_p99_reduction_vs_no_slo":
+            (base_strict_p99 / strict["plan_latency_s"]["p99"]
+             if math.isfinite(strict["plan_latency_s"]["p99"])
+             and strict["plan_latency_s"]["p99"] > 0 else math.nan),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="tpch", choices=["tpch", "tpcds"])
@@ -212,6 +413,11 @@ def main():
     ap.add_argument("--tenants", type=int, nargs="?", const=4, default=0,
                     help="run the multi-tenant scenario with N tenants "
                          "(default 4 when given without a value)")
+    ap.add_argument("--overload", action="store_true",
+                    help="run the overload-shedding scenario (arrival rate "
+                         "swept past measured capacity, one tenant per SLO "
+                         "class)")
+    ap.add_argument("--overload-factor", type=float, default=2.0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI; checks streaming-path parity "
                          "and the solve budget, skips artifact write")
@@ -224,6 +430,29 @@ def main():
         budget = max(args.budget_s, 2.0)
         cfg = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48,
                           n_c_enrich=12, max_bank=12, seed=args.seed)
+        if args.overload:
+            res = run_overload(args.bench, n=18,
+                               overload_factor=args.overload_factor,
+                               max_batch=4, budget_s=budget, seed=args.seed,
+                               cfg=cfg, calib_n=12)
+            print(json.dumps(res, indent=2))
+            if not res["outcomes_accounted"]:
+                raise SystemExit("some requests lost or half-served under "
+                                 "overload (status/artifact mismatch)")
+            if not res["survivors_identical"]:
+                raise SystemExit("overload perturbed surviving queries' "
+                                 "outputs vs the offline pipeline")
+            if not res["degraded_zero_fresh_solves"]:
+                raise SystemExit("degraded admissions triggered fresh "
+                                 "Algorithm 1 bank builds")
+            if not res["strict_p99_under_budget"]:
+                raise SystemExit(
+                    f"strict tenant p99 plan latency "
+                    f"{res['strict_p99_plan_latency_s']:.3f}s breached its "
+                    f"{budget:.1f}s budget under overload "
+                    f"({res['strict_n_finished']} finished)")
+            print("overload smoke ok")
+            return
         if args.tenants:
             res = run_tenants(args.bench, n=16, rate_qps=40.0,
                               n_tenants=args.tenants, max_batch=4,
@@ -255,12 +484,33 @@ def main():
         print("smoke ok")
         return
 
+    if args.overload:
+        res = run_overload(args.bench, n=args.n,
+                           overload_factor=args.overload_factor,
+                           max_batch=args.max_batch, budget_s=args.budget_s,
+                           seed=args.seed)
+        print(json.dumps(res, indent=2))
+        print(f"\noverload ({res['overload_factor']:.1f}x capacity "
+              f"{res['capacity_qps']:.1f} q/s): strict shed rate "
+              f"{res['strict_shed_rate']:.2f}, strict p99 "
+              f"{res['strict_p99_plan_latency_s'] * 1e3:.0f} ms "
+              f"(≤ budget: {res['strict_p99_under_budget']}) | goodput "
+              f"{res['goodput']:.2f} | degraded cheap/default "
+              f"{res['cheap_solves']}/{res['default_theta_solves']} | "
+              f"survivors identical: {res['survivors_identical']}")
+        for p in save_bench("server_overload", res):
+            print(f"wrote {p}")
+        return
+
     res = run(args.bench, n=args.n, rate_qps=args.rate_qps,
               max_batch=args.max_batch, budget_s=args.budget_s,
               seed=args.seed)
     res["tenants_scenario"] = run_tenants(
         args.bench, n=args.n, rate_qps=args.rate_qps,
         n_tenants=args.tenants or 4, max_batch=args.max_batch,
+        budget_s=args.budget_s, seed=args.seed)
+    res["overload_scenario"] = run_overload(
+        args.bench, n=args.n, max_batch=args.max_batch,
         budget_s=args.budget_s, seed=args.seed)
     print(json.dumps(res, indent=2))
     s, b = res["server"], res["batch32_baseline"]
@@ -280,6 +530,14 @@ def main():
           f" ms | Jain {tn['fairness_jain']:.3f} | per-tenant identical: "
           f"{tn['outputs_identical_per_tenant']} | no p99 regression: "
           f"{tn['no_tenant_p99_regression']}")
+    ov = res["overload_scenario"]
+    print(f"overload ({ov['overload_factor']:.1f}x capacity "
+          f"{ov['capacity_qps']:.1f} q/s): strict shed rate "
+          f"{ov['strict_shed_rate']:.2f}, strict p99 "
+          f"{ov['strict_p99_plan_latency_s'] * 1e3:.0f} ms "
+          f"(≤ budget: {ov['strict_p99_under_budget']}) | goodput "
+          f"{ov['goodput']:.2f} | survivors identical: "
+          f"{ov['survivors_identical']}")
     for p in save_bench("server", res, headline=True):
         print(f"wrote {p}")
 

@@ -18,6 +18,7 @@ Benchmarks → paper artifacts:
   runtime           (ours)       batched runtime re-optimization service
   server            (ours)       streaming-admission server latency/throughput
   server_tenants    (ours)       multi-tenant fairness + per-tenant p99/Jain
+  server_overload   (ours)       overload shedding: SLO classes past capacity
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -98,6 +99,8 @@ def main() -> None:
             b, n=64 if args.full else 32) for b in benches],
         "server_tenants": lambda: [bench_server.run_tenants(
             b, n=64 if args.full else 32) for b in benches],
+        "server_overload": lambda: [bench_server.run_overload(
+            b, n=96 if args.full else 48) for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,
         "kernels": bench_cluster.run_kernels,

@@ -14,12 +14,13 @@ import numpy as np
 from ...queryengine.plan import Query
 from ...queryengine.simulator import CostModel, DEFAULT_COST
 from ..models.perf_model import PerfModel
-from ..moo.hmooc import HMOOCConfig, HMOOCResult, hmooc_solve
+from ..moo.hmooc import EffectiveSet, HMOOCConfig, HMOOCResult, hmooc_solve
 from ..moo.wun import wun_select
 from .aggregation import aggregate_submission_theta
 from .objectives import StageObjectives
 
-__all__ = ["CompileTimeResult", "compile_time_optimize"]
+__all__ = ["CompileTimeResult", "compile_time_optimize",
+           "default_theta_result"]
 
 
 @dataclasses.dataclass
@@ -49,6 +50,7 @@ def compile_time_optimize(
     cfg: HMOOCConfig = HMOOCConfig(),
     cost: CostModel = DEFAULT_COST,
     cache=None,
+    effective_set: Optional[EffectiveSet] = None,
 ) -> CompileTimeResult:
     """Solve the fine-grained compile-time MOO and pick a WUN recommendation.
 
@@ -61,11 +63,22 @@ def compile_time_optimize(
     ``cache.store(query, cfg, eset, model, cost)`` records them after a
     solve.  A lookup hit on an identical query skips Algorithm 1 entirely
     and is bit-identical to a cold solve.
+
+    ``effective_set`` forces reuse of the given Algorithm 1 artifacts
+    directly (no cache consulted, nothing stored): the degraded serving
+    path uses it to reuse a template's banks across parametric variants —
+    approximate unless the query matches the one the banks were computed
+    from — without ever triggering a fresh Algorithm 1 bank build.
     """
+    if effective_set is not None and cache is not None:
+        raise ValueError("pass cache or effective_set, not both")
     t0 = time.perf_counter()
     obj = StageObjectives(query, model=model, cost=cost)
-    eset = cache.lookup(query, cfg, model, cost) if cache is not None \
-        else None
+    if effective_set is not None:
+        eset = effective_set
+    else:
+        eset = cache.lookup(query, cfg, model, cost) if cache is not None \
+            else None
     res: HMOOCResult = hmooc_solve(
         obj.stage_eval, obj.m, obj.d_c, obj.d_ps, cfg,
         snap_c=obj.snap_c, snap_ps=obj.snap_ps, effective_set=eset)
@@ -90,3 +103,37 @@ def compile_time_optimize(
         theta_p_sub=tp_raw, theta_s_sub=ts_raw,
         theta_p0=theta_p0, theta_s0=theta_s0,
         solve_time=dt, n_evals=res.n_evals)
+
+
+def default_theta_result(
+    query: Query,
+    *,
+    model: Optional[PerfModel] = None,
+    cost: CostModel = DEFAULT_COST,
+) -> CompileTimeResult:
+    """Spark-default configuration as a :class:`CompileTimeResult` — no MOO.
+
+    The last-resort degraded serving path: when a tenant's solve budget is
+    already unmeetable and not even cached Algorithm 1 artifacts exist for
+    the query's template, the server admits the query under the paper's
+    "default configuration" (Spark 3.5.0 documentation defaults, Table 6)
+    instead of queueing it into a blown budget.  Cost is one stage-model
+    evaluation per subQ (to report believed objectives) — no sampling,
+    no clustering, no banks, no DAG aggregation.
+    """
+    t0 = time.perf_counter()
+    obj = StageObjectives(query, model=model, cost=cost)
+    tc_u = obj.cs.default_unit()[None, :]                       # (1, d_c)
+    tps_u = np.tile(np.concatenate([obj.ps.default_unit(),
+                                    obj.ss.default_unit()]),
+                    (obj.m, 1))                                 # (m, d_ps)
+    front = np.zeros((1, 2), np.float64)
+    for i in range(obj.m):
+        front[0] += obj.stage_eval(i, tc_u, tps_u[i:i + 1])[0]
+    tc_raw, tp_raw, ts_raw = obj.split_raw(tc_u, tps_u)
+    theta_p0, theta_s0 = aggregate_submission_theta(query, tp_raw, ts_raw)
+    return CompileTimeResult(
+        front=front, choice=0, theta_c=tc_raw[0],
+        theta_p_sub=tp_raw, theta_s_sub=ts_raw,
+        theta_p0=theta_p0, theta_s0=theta_s0,
+        solve_time=time.perf_counter() - t0, n_evals=query.n_subqs)

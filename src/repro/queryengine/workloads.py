@@ -27,7 +27,7 @@ __all__ = [
     "Table", "TPCH_TABLES", "TPCDS_TABLES",
     "make_query", "make_benchmark", "parametric_variants", "default_workload",
     "serving_stream", "ArrivalModel", "StreamRequest", "TenantSpec",
-    "multi_tenant_stream",
+    "multi_tenant_stream", "SLO_CLASSES",
 ]
 
 
@@ -329,6 +329,9 @@ class StreamRequest:
     tenant: str = "default"  # issuing tenant (multi-tenant admission)
 
 
+SLO_CLASSES = ("strict", "degrade", "best_effort")
+
+
 @dataclasses.dataclass(frozen=True)
 class TenantSpec:
     """One tenant of a multi-tenant serving deployment.
@@ -340,6 +343,19 @@ class TenantSpec:
     per-tenant solve budget overriding the server default).  UDAO-style
     cost/performance preferences are per-user by nature; the spec is where
     a user's ``weights`` live.
+
+    ``slo`` declares what the server should do when the tenant's solve
+    budget has become *unmeetable* for a waiting request (the head would
+    start solving past ``arrival + budget − reserve·E[batch]``):
+
+    * ``"best_effort"`` (default) — keep queueing; the request is served
+      late (the pre-overload behavior).
+    * ``"degrade"`` — admit it through the cheap compile path instead
+      (template-cache-only solve / aggregated default θ, no fresh
+      Algorithm 1), trading plan quality for admission latency.
+    * ``"strict"`` — reject it outright (shed): the tenant prefers an
+      explicit error over a blown budget, keeping its served tail inside
+      the budget under overload.
     """
     name: str
     weights: Optional[Tuple[float, float]] = None  # None → server default
@@ -347,12 +363,17 @@ class TenantSpec:
     share: float = 1.0               # DRR weight within the priority tier
     priority: int = 0                # higher tiers compose first
     solve_budget_s: Optional[float] = None
+    slo: str = "best_effort"         # overload policy: strict|degrade|best_effort
 
     def __post_init__(self):
         if not self.name:
             raise ValueError("tenant name must be non-empty")
         if self.share <= 0:
             raise ValueError(f"share must be positive, got {self.share}")
+        if self.slo not in SLO_CLASSES:
+            raise ValueError(
+                f"unknown SLO class {self.slo!r}; expected one of "
+                f"{SLO_CLASSES}")
 
 
 def _tenant_seed(seed: int, name: str) -> int:

@@ -22,9 +22,11 @@ Streaming (both halves unified):
   shared ``RuntimeSession``, late arrivals admitted mid-session.
 * :class:`TenantScheduler` — multi-tenant admission accounting: per-tenant
   queues/deadline reserves, deficit-round-robin batch composition,
-  priority tiers with overdue promotion (no starvation).
+  priority tiers with overdue promotion (no starvation), and per-tenant
+  SLO triage under overload (shed strict heads whose budget is
+  unmeetable, flag degrade heads for the cheap compile path).
 """
-from .admission import TenantScheduler, TenantState
+from .admission import Admit, TenantScheduler, TenantState
 from .cache import CandidatePoolCache, EffectiveSetCache
 from .runtime import RuntimeSession, RuntimeSessionStats
 from .server import (OptimizerServer, ServedQuery, ServerConfig, ServerStats,
@@ -35,4 +37,4 @@ __all__ = ["EffectiveSetCache", "TuningService", "tune_batch",
            "ResponseCache", "RuntimeSession", "RuntimeSessionStats",
            "CandidatePoolCache", "OptimizerServer", "ServerConfig",
            "ServedQuery", "ServerStats", "TenantScheduler", "TenantState",
-           "jain_index"]
+           "Admit", "jain_index"]

@@ -22,22 +22,50 @@ per-request promise the server must keep for every tenant at once.
   first — but any tenant whose head request has passed its deadline is
   promoted ahead of *all* tiers (oldest first).  A lower tier therefore
   waits at most its budget while higher tiers burst: preemption bounds
-  latency instead of unbounding it.
+  latency instead of unbounding it.  Overdue pops are charged against the
+  tenant's DRR credit (floored at the standard empty-queue reset), so a
+  bursty tenant served via promotion cannot *also* spend its banked
+  credit on the next normal pass (the PR-5 double-dip fix).
+* **Overload triage (SLO classes).**  A request is *unmeetable* when even
+  an immediate flush would blow its budget:
+  ``arrival + budget − reserve·E[n] < now``.  What happens then is the
+  tenant's :class:`~repro.queryengine.workloads.TenantSpec` ``slo`` class:
+  ``strict`` heads are shed (popped and rejected, never solved) by
+  :meth:`TenantScheduler.shed_unmeetable`; ``degrade`` heads are composed
+  with ``Admit.degrade=True`` so the server routes them through the cheap
+  compile path; ``best_effort`` heads queue on as before.  Under sustained
+  overload the server therefore *adapts* — strict tenants keep their
+  latency promise by dropping excess load, degrade tenants trade plan
+  quality for admission, best-effort tenants absorb the queueing — instead
+  of silently blowing every tenant's budget.
 
 The scheduler only orders and accounts — it never touches solver state —
 so per-query *outputs* remain independent of composition (the golden
-determinism invariant); fairness policy shapes latency only.
+determinism invariant); fairness and overload policy shape latency (and
+which requests are served at full quality) only.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from collections import deque
-from typing import Deque, Dict, Iterable, List, Optional, Tuple
+from typing import Deque, Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 from ..queryengine.workloads import TenantSpec
 
-__all__ = ["TenantScheduler", "TenantState"]
+__all__ = ["TenantScheduler", "TenantState", "Admit"]
+
+
+class Admit(NamedTuple):
+    """One composed batch slot: ``(tenant, item, degrade)``.
+
+    ``degrade`` is True when the item was unmeetable at pop time and its
+    tenant's SLO class is ``"degrade"`` — the server must route it through
+    the cheap compile path instead of a fresh Algorithm 1 solve.
+    """
+    tenant: str
+    item: object
+    degrade: bool = False
 
 
 @dataclasses.dataclass
@@ -49,12 +77,15 @@ class TenantState:
     share: float = 1.0
     priority: int = 0
     budget_s: float = 1.0
+    slo: str = "best_effort"         # strict | degrade | best_effort
     reserve_q_s: float = 0.25        # per-query solve-time EWMA
     deficit: float = 0.0             # DRR credit carried across flushes
     queue: Deque[Tuple[float, object]] = dataclasses.field(
         default_factory=deque)       # (arrival_s, item) FIFO
     n_enqueued: int = 0
     n_dequeued: int = 0
+    n_shed: int = 0                  # strict-SLO rejections (never solved)
+    n_degraded: int = 0              # degrade-SLO cheap-path admissions
     slots_granted: int = 0           # batch slots over the scheduler's life
 
     @property
@@ -70,9 +101,9 @@ class TenantScheduler:
 
     Drives no clock of its own: the server asks ``next_deadline`` when
     idle, tests ``flush_due``-style conditions itself, and calls
-    ``compose`` to draw one micro-batch.  Unknown tenant names are
-    auto-registered with default policy, so anonymous single-stream
-    traffic needs no configuration.
+    ``shed_unmeetable`` + ``compose`` to draw one micro-batch.  Unknown
+    tenant names are auto-registered with default policy, so anonymous
+    single-stream traffic needs no configuration.
     """
 
     def __init__(self, tenants: Iterable[TenantSpec] = (), *,
@@ -90,6 +121,7 @@ class TenantScheduler:
                 priority=spec.priority,
                 budget_s=(spec.solve_budget_s if spec.solve_budget_s
                           is not None else budget_s),
+                slo=spec.slo,
                 reserve_q_s=reserve_q_s)
 
     # -- registry ------------------------------------------------------------
@@ -119,8 +151,17 @@ class TenantScheduler:
         return (st.head_arrival() + st.budget_s
                 - st.reserve_q_s * max(expected_n, 1))
 
-    def _expected_n(self, cap: int) -> int:
-        return min(max(self.total_waiting(), 1), cap)
+    def _expected_n(self, cap: int, picked: int = 0) -> int:
+        """Expected size of the flush batch being (or about to be) composed.
+
+        ``picked`` counts slots already drawn into the batch under
+        composition: they stay in the same flush (one solve window, one
+        ``compiled_s`` for every member), so the head being tested will
+        join a batch of ``picked + remaining`` (capped).  Shed items, by
+        contrast, leave the batch entirely — the shed loop passes
+        ``picked=0`` and sees the genuinely shrunken pool.
+        """
+        return min(max(picked + self.total_waiting(), 1), cap)
 
     def next_deadline(self, cap: int) -> float:
         """Earliest flush deadline over all waiting tenants (inf if idle)."""
@@ -132,25 +173,75 @@ class TenantScheduler:
     def deadline_due(self, now: float, cap: int) -> bool:
         return now >= self.next_deadline(cap)
 
+    def unmeetable(self, st: TenantState, now: float, cap: int,
+                   picked: int = 0) -> bool:
+        """True when even an immediate flush would blow the head's budget:
+        ``head_arrival + budget − reserve·E[n] < now`` (strictly — at
+        exactly the deadline, flushing now still meets the budget).
+        ``picked`` sizes E[n] for a batch already under composition."""
+        return bool(st.queue) \
+            and self._deadline(st, self._expected_n(cap, picked)) < now
+
+    # -- overload triage -----------------------------------------------------
+    def shed_unmeetable(self, now: float, cap: int
+                        ) -> List[Tuple[str, object]]:
+        """Pop and return every strict-SLO request whose budget is already
+        unmeetable — the server records them as rejected, they are never
+        solved.  Queues are FIFO, so popping stops at the first meetable
+        head; the expected batch size is re-derived as the pool drains
+        (shed items shrink the batch every later head would solve in).
+        """
+        shed: List[Tuple[str, object]] = []
+        while True:
+            over = [st for st in self._states.values()
+                    if st.slo == "strict" and self.unmeetable(st, now, cap)]
+            if not over:
+                return shed
+            st = min(over, key=lambda s: (s.head_arrival(), s.name))
+            _, item = st.queue.popleft()
+            st.n_dequeued += 1
+            st.n_shed += 1
+            if not st.queue:
+                st.deficit = 0.0           # standard DRR empty-queue reset
+            shed.append((st.name, item))
+
     # -- batch composition ---------------------------------------------------
-    def compose(self, now: float, cap: int) -> List[Tuple[str, object]]:
+    def compose(self, now: float, cap: int) -> List[Admit]:
         """Draw one micro-batch of at most ``cap`` items.
 
         Overdue heads first (any tier, oldest arrival first — the
         no-starvation guarantee), then priority tiers high→low with
-        deficit-round-robin inside each tier.  Per-tenant slot grants are
-        recorded in :attr:`TenantState.slots_granted`; their sum always
-        equals the number of items returned (conservation).
+        deficit-round-robin inside each tier.  Overdue pops are charged
+        against the tenant's DRR credit (floored at the standard
+        empty-queue reset of 0), so a burst served via promotion cannot
+        double-dip on the next normal pass.  The expected batch size used
+        by the overdue/degrade checks counts slots already composed plus
+        the remaining pool (capped): every member of this batch shares one
+        flush window, so an item popped late is *not* solving in a smaller
+        batch — only genuinely removed items (sheds, between composes)
+        shrink E[n].  An overdue head of a ``degrade``-SLO tenant is
+        admitted with ``degrade=True`` (its budget is already unmeetable
+        at full quality in the batch it joins).  Per-tenant slot grants
+        are recorded in :attr:`TenantState.slots_granted`; their sum
+        always equals the number of items returned (conservation).
         """
-        picked: List[Tuple[str, object]] = []
-        expected = self._expected_n(cap)
+        picked: List[Admit] = []
         while len(picked) < cap:
+            n_p = len(picked)
             over = [st for st in self._states.values()
-                    if st.queue and self._deadline(st, expected) <= now]
+                    if st.queue
+                    and self._deadline(st,
+                                       self._expected_n(cap, n_p)) <= now]
             if not over:
                 break
             st = min(over, key=lambda s: (s.head_arrival(), s.name))
-            picked.append(self._pop(st))
+            degrade = st.slo == "degrade" \
+                and self.unmeetable(st, now, cap, n_p)
+            picked.append(self._pop(st, degrade))
+            # Promotion is not free slot-wise: consume any banked credit
+            # (never below the standard empty-queue reset of 0, which also
+            # applies if the promotion just drained the queue).
+            st.deficit = 0.0 if not st.queue else max(st.deficit - 1.0, 0.0)
         while len(picked) < cap:
             busy = [st for st in self._states.values() if st.queue]
             if not busy:
@@ -166,26 +257,37 @@ class TenantScheduler:
             for st in tier_states:
                 st.deficit += st.share / qmax
                 while st.deficit >= 1.0 and st.queue and len(picked) < cap:
-                    picked.append(self._pop(st))
+                    degrade = st.slo == "degrade" \
+                        and self.unmeetable(st, now, cap, len(picked))
+                    picked.append(self._pop(st, degrade))
                     st.deficit -= 1.0
                 if not st.queue:
                     st.deficit = 0.0       # standard DRR: no banked credit
         return picked
 
-    def _pop(self, st: TenantState) -> Tuple[str, object]:
+    def _pop(self, st: TenantState, degrade: bool = False) -> Admit:
         _, item = st.queue.popleft()
         st.n_dequeued += 1
         st.slots_granted += 1
-        return st.name, item
+        if degrade:
+            st.n_degraded += 1
+        return Admit(st.name, item, degrade)
 
     # -- solve-time accounting ----------------------------------------------
     def note_solve(self, dt: float, n: int,
                    tenant_names: Iterable[str]) -> None:
-        """Fold one micro-batch solve of ``n`` queries into the reserves.
+        """Fold one micro-batch admission window of ``n`` queries into the
+        reserves.
 
-        The EWMA tracks *per-query* solve time (``dt / n``) so a large
-        batch cannot inflate the reserve later applied to a small one; the
-        deadline scales it back up by the expected batch size.
+        ``dt`` must be the *full* clock charge of the flush — the batched
+        compile solve plus each query's initial AQE planning step inside
+        ``session.admit()`` — i.e. exactly what the server's simulated
+        clock advances by (the PR-5 fix: feeding only the ``tune_batch``
+        slice made the reserve systematically undershoot the true
+        per-query admission cost, scheduling deadlines too late and hiding
+        overload).  The EWMA tracks *per-query* time (``dt / n``) so a
+        large batch cannot inflate the reserve later applied to a small
+        one; the deadline scales it back up by the expected batch size.
         """
         dt_q = dt / max(n, 1)
         a = self.reserve_ewma

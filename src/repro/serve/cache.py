@@ -87,6 +87,8 @@ class EffectiveSetCache:
         self.approx_hits = 0     # banks reused across variants (approximate)
         self.structure_hits = 0  # candidates reused, banks recomputed
         self.misses = 0
+        self.peek_hits = 0       # degraded-path bank probes that found banks
+        self.peek_misses = 0     # degraded-path probes with nothing to reuse
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -108,6 +110,28 @@ class EffectiveSetCache:
         self.structure_hits += 1
         return entry.eset.without_banks()
 
+    def peek(self, query: Query, cfg: HMOOCConfig,
+             model=None, cost=None) -> Optional[Tuple[EffectiveSet, bool]]:
+        """Degraded-path probe: banks for this template, or None.
+
+        Unlike :meth:`lookup`, a fingerprint mismatch does *not* strip the
+        banks and ``reuse_banks_across_variants`` is ignored — the degraded
+        serving path explicitly opts into approximate cross-variant reuse
+        (its alternative is no solve at all, never a fresh Algorithm 1).
+        Returns ``(effective_set_with_banks, exact)`` where ``exact`` is
+        True when the stored fingerprint matches the query (bank reuse is
+        then bit-identical to a cold solve); returns None when the
+        template has no stored banks usable for this query's subQ count.
+        Never mutates LRU order or hit/miss stats of the normal path.
+        """
+        entry = self._entries.get(template_key(query, cfg, model, cost))
+        if entry is None or entry.eset.opt_idx is None \
+                or len(entry.eset.opt_idx[0]) != query.n_subqs:
+            self.peek_misses += 1
+            return None
+        self.peek_hits += 1
+        return entry.eset, entry.fingerprint == query_fingerprint(query)
+
     def store(self, query: Query, cfg: HMOOCConfig, eset: EffectiveSet,
               model=None, cost=None) -> None:
         key = template_key(query, cfg, model, cost)
@@ -122,7 +146,9 @@ class EffectiveSetCache:
         return {"entries": len(self._entries), "hits": self.hits,
                 "approx_hits": self.approx_hits,
                 "structure_hits": self.structure_hits,
-                "misses": self.misses}
+                "misses": self.misses,
+                "peek_hits": self.peek_hits,
+                "peek_misses": self.peek_misses}
 
 
 class CandidatePoolCache:

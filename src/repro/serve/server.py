@@ -34,6 +34,19 @@ Admission policy (deadline-aware micro-batching):
   (seeded by ``solve_reserve_s``) — i.e. the latest moment solving can
   start and still make that tenant's budget.
 
+Overload handling (PR 5): when a waiting request's budget has become
+*unmeetable* (its flush deadline has passed — even solving immediately
+would blow the budget), the tenant's SLO class decides: ``strict``
+requests are **shed** (``status="shed"``: rejected as first-class
+outcomes, never solved, excluded from latency percentiles), ``degrade``
+requests are admitted through the **cheap compile path**
+(``TuningService.tune_batch(degraded=...)``: cached template banks or the
+Spark defaults — zero fresh Algorithm 1 solves), and ``best_effort``
+requests keep queueing as before.  Under sustained overload the server
+sheds/degrades exactly the excess instead of silently blowing every
+tenant's budget; surviving queries' outputs are untouched (the golden
+determinism invariant extends to overload).
+
 Clock model: arrivals advance on the simulated clock; optimizer work
 (compile solves, fusion rounds, realization) advances it by measured wall
 time.  Batch composition therefore depends on timing — but no per-query
@@ -93,42 +106,68 @@ class ServerConfig:
 
 @dataclasses.dataclass
 class ServedQuery:
-    """One request's lifecycle through the server (simulated-clock times)."""
+    """One request's lifecycle through the server (simulated-clock times).
+
+    ``status`` is the request's admission outcome:
+
+    * ``"served"``   — full-quality solve, finished normally;
+    * ``"degraded"`` — budget was unmeetable at admission and the tenant's
+      SLO class is ``degrade``: solved via the cheap compile path
+      (template-cache banks / Spark defaults, no fresh Algorithm 1);
+    * ``"shed"``     — budget was unmeetable and the tenant's SLO class is
+      ``strict``: rejected without solving (``ct``/``result`` stay None;
+      ``finished_s`` records the rejection time).
+
+    Latency reports must aggregate over finished (non-shed) queries only —
+    a shed query's ``compiled_s`` is NaN by construction.
+    """
     rid: int
     request: StreamRequest
     arrival_s: float
     tenant: str = "default"
+    status: str = "served"             # served | degraded | shed
     admitted_s: float = math.nan       # micro-batch flush began
     compiled_s: float = math.nan       # compile-time θ ready
-    finished_s: float = math.nan       # final plan + objectives realized
+    finished_s: float = math.nan       # final plan realized (or shed time)
     joined_running: bool = False       # admitted into an already-live session
     ct: Optional[CompileTimeResult] = None
     result: Optional[AQEResult] = None
 
     @property
     def solve_latency_s(self) -> float:
-        """Admission-to-compile-time-θ latency (the paper's solve budget)."""
+        """Arrival-to-compile-time-θ latency (the paper's solve budget is
+        stated against this span: it includes the waiting-room time)."""
         return self.compiled_s - self.arrival_s
 
     @property
     def plan_latency_s(self) -> float:
-        """Admission-to-final-plan latency (through runtime re-tuning)."""
+        """Arrival-to-final-plan latency (through runtime re-tuning)."""
         return self.finished_s - self.arrival_s
 
 
 @dataclasses.dataclass
 class ServerStats:
     n_queries: int = 0
+    n_finished: int = 0                # solved to completion (non-shed)
     n_micro_batches: int = 0
     n_joined_running: int = 0          # admissions into a live session
+    n_shed: int = 0                    # strict-SLO rejections
+    n_degraded: int = 0                # degrade-SLO cheap-path admissions
     rounds: int = 0                    # fusion rounds over the run
     makespan_s: float = 0.0            # last finish − first arrival (sim)
     wall_time_s: float = 0.0           # real time spent in serve()
     tenant_slots: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # Per-flush (charged clock window, batch size): the exact amounts the
+    # simulated clock advanced by and note_solve folded into the reserve
+    # EWMAs — the reserve regression test replays these.
+    flush_windows: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def qps(self) -> float:
-        return self.n_queries / self.makespan_s if self.makespan_s else 0.0
+        """Served throughput: *finished* queries over the makespan — a shed
+        request is rejected, not served, and must not inflate qps."""
+        return self.n_finished / self.makespan_s if self.makespan_s else 0.0
 
 
 class OptimizerServer:
@@ -222,6 +261,9 @@ class OptimizerServer:
         first_arrival = t
         n_batches = 0
         n_joined_running = 0
+        n_shed = 0
+        n_degraded = 0
+        flush_windows: List[Tuple[float, int]] = []
         flushes_since_round = 0
         rounds0 = self.session.rounds_total
         slots0 = {st.name: st.slots_granted for st in sched.states()}
@@ -261,18 +303,30 @@ class OptimizerServer:
         admit_arrived(t)
         while pos < len(incoming) or sched.total_waiting() or in_flight:
             if flush_due(t):
-                batch = [s for _, s in sched.compose(t, cfgv.max_batch)]
+                # Overload triage first: strict-SLO requests whose budget is
+                # already unmeetable are rejected here — first-class
+                # outcomes, never solved, never poisoning latency stats.
+                for _, s in sched.shed_unmeetable(t, cfgv.max_batch):
+                    s.status = "shed"
+                    s.finished_s = t
+                    n_shed += 1
+                admits = sched.compose(t, cfgv.max_batch)
+                if not admits:
+                    continue           # everything waiting was shed
+                batch = [a.item for a in admits]
                 n_batches += 1
                 flushes_since_round += 1
-                for s in batch:
+                for a, s in zip(admits, batch):
                     s.admitted_s = t
+                    if a.degrade:
+                        s.status = "degraded"
+                        n_degraded += 1
                 batch_w = [self.tenant_weights(s.tenant) for s in batch]
                 t0 = time.perf_counter()
                 cts = self.tuning.tune_batch(
                     [s.request.query for s in batch], batch_w,
-                    tenants=[s.tenant for s in batch])
-                sched.note_solve(time.perf_counter() - t0, len(batch),
-                                 (s.tenant for s in batch))
+                    tenants=[s.tenant for s in batch],
+                    degraded=[a.degrade for a in admits])
                 joined_running = self.session.n_active > 0
                 for s, ct, w in zip(batch, cts, batch_w):
                     s.ct = ct
@@ -284,9 +338,16 @@ class OptimizerServer:
                         pool_scope=(s.tenant if cfgv.isolate_tenant_pools
                                     else None))
                     in_flight[s.rid] = s
-                # The clock covers the whole window — the solve plus each
-                # query's initial AQE planning step inside admit().
-                t += time.perf_counter() - t0
+                # One window measurement feeds both the clock charge and the
+                # reserve EWMA: the whole flush — the batched solve plus
+                # each query's initial AQE planning step inside admit().
+                # (Feeding note_solve only the tune_batch slice made the
+                # reserve undershoot the true per-query admission cost.)
+                window = time.perf_counter() - t0
+                sched.note_solve(window, len(batch),
+                                 (s.tenant for s in batch))
+                flush_windows.append((window, len(batch)))
+                t += window
                 for s in batch:
                     s.compiled_s = t
                 admit_arrived(t)
@@ -314,29 +375,67 @@ class OptimizerServer:
         out = [served[r.rid] for r in requests]
         finished = [s.finished_s for s in out if math.isfinite(s.finished_s)]
         self.last_run = ServerStats(
-            n_queries=len(out), n_micro_batches=n_batches,
+            n_queries=len(out),
+            n_finished=sum(1 for s in out if s.status != "shed"
+                           and math.isfinite(s.finished_s)),
+            n_micro_batches=n_batches,
             n_joined_running=n_joined_running,
+            n_shed=n_shed, n_degraded=n_degraded,
             rounds=self.session.rounds_total - rounds0,
             makespan_s=(max(finished) - first_arrival) if finished else 0.0,
             wall_time_s=time.perf_counter() - wall0,
             tenant_slots={st.name: st.slots_granted - slots0.get(st.name, 0)
                           for st in sched.states()
-                          if st.slots_granted - slots0.get(st.name, 0)})
+                          if st.slots_granted - slots0.get(st.name, 0)},
+            flush_windows=flush_windows)
         return out
 
     # -- reporting -----------------------------------------------------------
+    def _goodput(self, sub: Sequence[ServedQuery]) -> float:
+        """Fraction of requests finishing inside their tenant's budget.
+
+        Shed requests count against goodput (they never finish); the
+        denominator is *all* requests, so goodput + shed rate + late rate
+        partition the stream.
+        """
+        if not sub:
+            return math.nan
+        ok = sum(1 for s in sub
+                 if s.status != "shed" and math.isfinite(s.finished_s)
+                 and s.plan_latency_s
+                 <= self.scheduler.state(s.tenant).budget_s)
+        return ok / len(sub)
+
     def latency_report(self, served: Sequence[ServedQuery]) -> dict:
         """p50/p99/max of the two latency metrics plus throughput.
 
+        Latency percentiles aggregate over *finished* queries only
+        (``status != "shed"``): one rejected request must not NaN-poison
+        the whole report.  Shed/degrade are reported as first-class
+        counts and rates alongside, plus goodput — the fraction of all
+        requests that finished within their tenant's budget.
+
         With multi-tenant traffic the report adds a per-tenant breakdown
-        and the Jain fairness index over per-tenant p99 plan latency
-        (1.0 = perfectly even tails across tenants).
+        (including each tenant's SLO class and shed/degrade counts) and
+        the Jain fairness index over per-tenant p99 plan latency of
+        finished queries (1.0 = perfectly even tails across tenants;
+        tenants with nothing finished are excluded).
         """
-        plan = np.array([s.plan_latency_s for s in served], np.float64)
-        solve = np.array([s.solve_latency_s for s in served], np.float64)
+        fin = [s for s in served
+               if s.status != "shed" and math.isfinite(s.finished_s)]
+        plan = np.array([s.plan_latency_s for s in fin], np.float64)
+        solve = np.array([s.solve_latency_s for s in fin], np.float64)
+        n_shed = sum(1 for s in served if s.status == "shed")
+        n_degraded = sum(1 for s in served if s.status == "degraded")
         st = self.last_run
         rep = {
             "n_queries": st.n_queries,
+            "n_finished": len(fin),
+            "n_shed": n_shed,
+            "n_degraded": n_degraded,
+            "shed_rate": n_shed / len(served) if served else math.nan,
+            "degrade_rate": n_degraded / len(served) if served else math.nan,
+            "goodput": self._goodput(served),
             "n_micro_batches": st.n_micro_batches,
             "n_joined_running": st.n_joined_running,
             "rounds": st.rounds,
@@ -350,13 +449,26 @@ class OptimizerServer:
             per = {}
             for name in names:
                 sub = [s for s in served if s.tenant == name]
+                sub_fin = [s for s in sub if s.status != "shed"
+                           and math.isfinite(s.finished_s)]
+                ts = self.scheduler.state(name)
+                shed = sum(1 for s in sub if s.status == "shed")
+                degr = sum(1 for s in sub if s.status == "degraded")
                 per[name] = {
                     "n_queries": len(sub),
+                    "n_finished": len(sub_fin),
+                    "slo": ts.slo,
+                    "budget_s": ts.budget_s,
+                    "n_shed": shed,
+                    "n_degraded": degr,
+                    "shed_rate": shed / len(sub),
+                    "degrade_rate": degr / len(sub),
+                    "goodput": self._goodput(sub),
                     "batch_slots": st.tenant_slots.get(name, 0),
                     "solve_latency_s": _pcts(np.array(
-                        [s.solve_latency_s for s in sub], np.float64)),
+                        [s.solve_latency_s for s in sub_fin], np.float64)),
                     "plan_latency_s": _pcts(np.array(
-                        [s.plan_latency_s for s in sub], np.float64)),
+                        [s.plan_latency_s for s in sub_fin], np.float64)),
                 }
             rep["tenants"] = per
             rep["fairness_jain"] = jain_index(
@@ -365,9 +477,15 @@ class OptimizerServer:
 
 
 def jain_index(x: Sequence[float]) -> float:
-    """Jain fairness index (Σx)² / (n·Σx²): 1.0 = perfectly even."""
+    """Jain fairness index (Σx)² / (n·Σx²): 1.0 = perfectly even.
+
+    Non-finite entries are dropped (an all-shed tenant's p99 is NaN — it
+    must not wipe out the whole fairness report); NaN only when nothing
+    finite (or nonzero) remains.
+    """
     a = np.asarray(list(x), np.float64)
-    if a.size == 0 or not np.isfinite(a).all() or (a == 0).all():
+    a = a[np.isfinite(a)]
+    if a.size == 0 or (a == 0).all():
         return math.nan
     return float(a.sum() ** 2 / (a.size * (a * a).sum()))
 

@@ -27,7 +27,9 @@ import numpy as np
 
 from ..core.models.perf_model import PerfModel
 from ..core.moo.hmooc import HMOOCConfig
-from ..core.tuning.compile_time import CompileTimeResult, compile_time_optimize
+from ..core.tuning.compile_time import (CompileTimeResult,
+                                        compile_time_optimize,
+                                        default_theta_result)
 from ..queryengine.plan import Query
 from ..queryengine.simulator import CostModel, DEFAULT_COST
 from .cache import EffectiveSetCache, query_fingerprint
@@ -42,6 +44,8 @@ class BatchStats:
     n_queries: int = 0
     n_solved: int = 0            # actual solver invocations (post-dedup)
     n_deduped: int = 0           # served from an identical request (any age)
+    n_cheap: int = 0             # degraded: solved on reused template banks
+    n_default_theta: int = 0     # degraded: served the Spark defaults
     wall_time: float = 0.0
 
     @property
@@ -118,6 +122,7 @@ class TuningService:
         else:
             self._results = ResponseCache() if dedupe else None
         self.last_batch = BatchStats()
+        self.totals = BatchStats()     # cumulative over the service's life
 
     def tune_batch(
         self,
@@ -125,6 +130,7 @@ class TuningService:
         weights: Union[Weights, Sequence[Weights]] = (0.9, 0.1),
         *,
         tenants: Optional[Sequence[Optional[str]]] = None,
+        degraded: Optional[Sequence[bool]] = None,
     ) -> List[CompileTimeResult]:
         """Solve the compile-time MOO for every query; aligned results.
 
@@ -132,14 +138,27 @@ class TuningService:
         entries per tenant: a multi-tenant server passes each request's
         tenant id so cached weighted picks never cross tenants.  ``None``
         keeps the anonymous single-stream behavior.
+
+        ``degraded`` (aligned with ``queries``) marks queries whose solve
+        budget is already blown (degrade-SLO overload admissions): they are
+        routed through the *cheap* compile path — an exact response-cache
+        hit if one exists, else a solve on the template's cached Algorithm 1
+        banks (approximate across parametric variants), else the Spark
+        default configuration — never a fresh Algorithm 1 bank build.
+        Approximate degraded results are cached under a degrade-marked key,
+        so they can never be served to a later full-quality request.
         """
         t0 = time.perf_counter()
         per_q_weights = _expand_weights(weights, len(queries))
         if tenants is not None and len(tenants) != len(queries):
             raise ValueError(
                 f"got {len(tenants)} tenant ids for {len(queries)} queries")
+        if degraded is not None and len(degraded) != len(queries):
+            raise ValueError(
+                f"got {len(degraded)} degrade flags for {len(queries)} "
+                "queries")
         results: List[Optional[CompileTimeResult]] = [None] * len(queries)
-        n_solved = 0
+        n_solved = n_cheap = n_default = 0
         for qi, (q, w) in enumerate(zip(queries, per_q_weights)):
             # qid + statistics fingerprint: the 32-bit crc alone could
             # collide across distinct queries in a long-lived service.
@@ -155,6 +174,13 @@ class TuningService:
                 if hit is not None:
                     results[qi] = hit
                     continue
+            if degraded is not None and degraded[qi]:
+                results[qi], kind = self._tune_cheap(q, w, key)
+                if kind == "cheap":
+                    n_cheap += 1
+                else:
+                    n_default += 1
+                continue
             results[qi] = compile_time_optimize(
                 q, model=self.model, weights=w, cfg=self.cfg,
                 cost=self.cost, cache=self.cache)
@@ -164,8 +190,47 @@ class TuningService:
         dt = time.perf_counter() - t0
         self.last_batch = BatchStats(
             n_queries=len(queries), n_solved=n_solved,
-            n_deduped=len(queries) - n_solved, wall_time=dt)
+            n_deduped=(len(queries) - n_solved - n_cheap - n_default),
+            n_cheap=n_cheap, n_default_theta=n_default, wall_time=dt)
+        for f in dataclasses.fields(BatchStats):
+            setattr(self.totals, f.name,
+                    getattr(self.totals, f.name) + getattr(self.last_batch,
+                                                           f.name))
         return results  # type: ignore[return-value]
+
+    def _tune_cheap(self, q: Query, w: Weights, exact_key: tuple
+                    ) -> Tuple[CompileTimeResult, str]:
+        """Budget-blown solve: cached template banks or the Spark defaults.
+
+        Never builds fresh Algorithm 1 banks.  The caller has already
+        missed the exact response cache for ``exact_key``; approximate
+        results are stored under a degrade-marked variant of that key
+        (exact bank reuse — matching fingerprint — is bit-identical to a
+        full solve and stored under the exact key itself).
+        """
+        peeked = self.cache.peek(q, self.cfg, self.model, self.cost)
+        if peeked is not None:
+            eset, exact = peeked
+            key = exact_key if exact else ("degraded",) + exact_key
+            if self._results is not None:
+                hit = self._results.get(key)
+                if hit is not None:
+                    return hit, "cheap"
+            res = compile_time_optimize(
+                q, model=self.model, weights=w, cfg=self.cfg,
+                cost=self.cost, effective_set=eset)
+            if self._results is not None:
+                self._results.put(key, res)
+            return res, "cheap"
+        key = ("degraded",) + exact_key
+        if self._results is not None:
+            hit = self._results.get(key)
+            if hit is not None:
+                return hit, "default"
+        res = default_theta_result(q, model=self.model, cost=self.cost)
+        if self._results is not None:
+            self._results.put(key, res)
+        return res, "default"
 
 
 def tune_batch(

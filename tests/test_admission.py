@@ -84,7 +84,7 @@ def test_conservation_and_fifo(seed, n_tenants, cap):
         grants = {s.name: s.slots_granted - before[s.name]
                   for s in sched.states()}
         assert sum(grants.values()) == len(picked)       # conservation
-        for name, item in picked:
+        for name, item, _ in picked:
             deq[name].append(item)
         now += 0.01
     assert deq == enq                                    # FIFO per tenant
@@ -109,10 +109,10 @@ def test_no_starvation_overdue_beats_priority(seed, cap):
         sched.enqueue("high", f"h{k}", 0.0)
     # Before low's deadline, priority preempts: batches are pure high.
     picked = sched.compose(0.5, cap)
-    assert all(name == "high" for name, _ in picked)
+    assert all(name == "high" for name, _, _ in picked)
     # At/after the deadline the low head is promoted ahead of every tier.
     picked = sched.compose(1.0, cap)
-    assert picked[0] == ("low", "starved")
+    assert picked[0] == ("low", "starved", False)
 
 
 @settings(max_examples=15, deadline=None)
@@ -130,7 +130,7 @@ def test_drr_shares_track_configured_ratio(seed, share_a, share_b):
         sched.enqueue("b", k, 0.0)
     grants = []
     while len(grants) < n:
-        grants.extend(name for name, _ in sched.compose(0.0, 8))
+        grants.extend(name for name, _, _ in sched.compose(0.0, 8))
     got_a = grants[:n].count("a")
     want_a = n * share_a / (share_a + share_b)
     # DRR quantization error is bounded by one quantum per pass.
@@ -147,7 +147,7 @@ def test_tiny_share_composes_in_bounded_passes():
                             reserve_q_s=0.0)
     for k in range(4):
         sched.enqueue("tiny", k, 0.0)
-    assert [i for _, i in sched.compose(0.0, 4)] == [0, 1, 2, 3]
+    assert [i for _, i, _ in sched.compose(0.0, 4)] == [0, 1, 2, 3]
     # Ratios still respected when a tiny share competes with a normal one.
     sched2 = TenantScheduler([TenantSpec(name="tiny", share=1e-9,
                                          solve_budget_s=1e9),
@@ -157,7 +157,7 @@ def test_tiny_share_composes_in_bounded_passes():
     for k in range(20):
         sched2.enqueue("tiny", k, 0.0)
         sched2.enqueue("big", k, 0.0)
-    grants = [n for n, _ in sched2.compose(0.0, 8)]
+    grants = [n for n, _, _ in sched2.compose(0.0, 8)]
     assert grants.count("big") >= 7       # tiny earns ≪ one slot per pass
 
 
@@ -171,11 +171,11 @@ def test_priority_tier_preempts_composition():
         sched.enqueue("hi", k, 0.0)
         sched.enqueue("lo", k, 0.0)
     picked = sched.compose(0.0, 4)
-    assert [name for name, _ in picked] == ["hi"] * 4
+    assert [name for name, _, _ in picked] == ["hi"] * 4
     # Once the high tier drains, the low tier gets the whole batch.
     sched.compose(0.0, 2)
     picked = sched.compose(0.0, 4)
-    assert [name for name, _ in picked] == ["lo"] * 4
+    assert [name for name, _, _ in picked] == ["lo"] * 4
 
 
 def test_unknown_tenant_auto_registered_with_defaults():
@@ -184,12 +184,163 @@ def test_unknown_tenant_auto_registered_with_defaults():
     st_ = sched.state("walk-in")
     assert st_.budget_s == 2.0 and st_.reserve_q_s == 0.125
     assert st_.weights is None and st_.priority == 0
-    assert sched.compose(100.0, 4) == [("walk-in", "x")]
+    assert st_.slo == "best_effort"
+    assert sched.compose(100.0, 4) == [("walk-in", "x", False)]
 
 
 def test_duplicate_tenant_specs_rejected():
     with pytest.raises(ValueError, match="duplicate"):
         TenantScheduler([TenantSpec(name="a"), TenantSpec(name="a")])
+
+
+# ---------------------------------------------------------------------------
+# Overload triage: SLO classes, shed/degrade decisions (PR-5 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_shed_unmeetable_pops_strict_only():
+    """Only strict-SLO tenants shed; degrade/best_effort heads stay queued
+    (degrade is handled at compose time, best_effort keeps waiting)."""
+    sched = TenantScheduler(
+        [TenantSpec(name="s", slo="strict", solve_budget_s=0.1),
+         TenantSpec(name="d", slo="degrade", solve_budget_s=0.1),
+         TenantSpec(name="b", slo="best_effort", solve_budget_s=0.1)],
+        reserve_q_s=0.05)
+    for name in ("s", "d", "b"):
+        sched.enqueue(name, f"{name}0", 0.0)
+        sched.enqueue(name, f"{name}1", 0.0)
+    shed = sched.shed_unmeetable(10.0, cap=8)       # way past every budget
+    assert shed == [("s", "s0"), ("s", "s1")]
+    st = sched.state("s")
+    assert st.n_shed == 2 and st.waiting == 0
+    assert st.slots_granted == 0                    # shed ≠ batch slots
+    # The others were untouched and compose with the right degrade flags.
+    picked = sched.compose(10.0, cap=8)
+    assert sorted((n, i, g) for n, i, g in picked) == [
+        ("b", "b0", False), ("b", "b1", False),
+        ("d", "d0", True), ("d", "d1", True)]
+    assert sched.state("d").n_degraded == 2
+    assert sched.state("b").n_degraded == 0
+
+
+def test_shed_respects_expected_batch_scaling():
+    """Unmeetable is `arrival + budget − reserve·E[n] < now` — with a big
+    backlog the expected solve is longer, so heads shed earlier; and the
+    expected size is re-derived as the pool drains, so shedding stops as
+    soon as the remaining batch became small enough to meet the budget."""
+    sched = TenantScheduler([TenantSpec(name="s", slo="strict",
+                                        solve_budget_s=0.8)],
+                            reserve_q_s=0.25)
+    for k in range(4):
+        sched.enqueue("s", k, 0.0)
+    # E[4]: deadline = 0.8 − 4·0.25 = −0.2 < 0.05 → shed the head.  After
+    # one shed E[3]: deadline = 0.8 − 0.75 = 0.05, NOT strictly < now →
+    # the rest are meetable and must survive.
+    shed = sched.shed_unmeetable(0.05, cap=8)
+    assert [i for _, i in shed] == [0]
+    assert sched.state("s").waiting == 3
+
+
+def test_degrade_flag_sized_to_the_batch_being_composed():
+    """The degrade check's E[n] counts already-picked slots plus the
+    remaining pool: every member of one compose shares one flush window,
+    so if the 4-item batch blows the budget, *all four* are admitted
+    degraded — a remaining-pool-only E[n] would mark just the first and
+    burn full solves into an already-blown budget."""
+    sched = TenantScheduler([TenantSpec(name="d", slo="degrade",
+                                        solve_budget_s=0.8)],
+                            reserve_q_s=0.25)
+    for k in range(4):
+        sched.enqueue("d", k, 0.0)
+    # E[n]=4 throughout: deadline = 0.8 − 4·0.25 = −0.2 < 0.05 for every
+    # member of the batch.
+    picked = sched.compose(0.05, cap=8)
+    assert [i for _, i, _ in picked] == [0, 1, 2, 3]    # FIFO preserved
+    assert [g for _, _, g in picked] == [True, True, True, True]
+    assert sched.state("d").n_degraded == 4
+    # A later, genuinely smaller batch is meetable again: nothing sticky.
+    sched.enqueue("d", 4, 10.0)
+    assert sched.compose(10.0, cap=8) == [("d", 4, False)]
+
+
+def test_meetable_degrade_tenant_not_degraded():
+    sched = TenantScheduler([TenantSpec(name="d", slo="degrade",
+                                        solve_budget_s=10.0)],
+                            reserve_q_s=0.1)
+    sched.enqueue("d", "x", 0.0)
+    assert sched.compose(0.0, cap=4) == [("d", "x", False)]
+    assert sched.state("d").n_degraded == 0
+
+
+def test_slo_class_validated():
+    with pytest.raises(ValueError, match="SLO class"):
+        TenantSpec(name="x", slo="bogus")
+
+
+# ---------------------------------------------------------------------------
+# DRR credit double-dip (PR-5 bugfix): overdue pops charge the deficit
+# ---------------------------------------------------------------------------
+
+def test_overdue_pop_consumes_banked_credit():
+    """A tenant served via overdue promotion must pay for the slot out of
+    its banked DRR credit (floored at the standard empty-queue reset of
+    0), not keep it for a double-dip on the next normal pass."""
+    a = TenantSpec(name="a", solve_budget_s=1.0)
+    b = TenantSpec(name="b", solve_budget_s=1e9)
+    sched = TenantScheduler([a, b], reserve_q_s=0.0)
+    for k in range(4):
+        sched.enqueue("a", f"a{k}", 0.0)
+        sched.enqueue("b", f"b{k}", 100.0)
+    sched.state("a").deficit = 1.0          # banked from earlier passes
+    # a's head is overdue at t=2: promoted — and the banked credit is
+    # spent by the promotion.
+    picked = sched.compose(2.0, cap=2)
+    assert picked[0].tenant == "a"
+    assert sched.state("a").deficit == 0.0
+    # Floor at the standard reset: promotion never drives credit negative.
+    sched.state("a").deficit = 0.25
+    picked = sched.compose(2.0, cap=1)
+    assert picked[0].tenant == "a" and sched.state("a").deficit == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 6))
+def test_bursty_overdue_traffic_properties(seed, n_tenants, cap):
+    """Fairness properties under bursty-*overdue* traffic: random mixes
+    where a fraction of every tenant's arrivals are long past their budget
+    (so overdue promotion, the deficit charge, and the drain-aware E[n]
+    all exercise every compose).  Invariants: slot conservation, per-tenant
+    FIFO, DRR credit never negative (promotion charges floor at the
+    standard reset), and an emptied queue always resets its credit."""
+    rng = np.random.default_rng(seed)
+    specs = _random_specs(rng, n_tenants)
+    sched = TenantScheduler(specs, budget_s=0.5, reserve_q_s=0.1)
+    now = 100.0
+    enq = {s.name: [] for s in specs}
+    n_items = int(rng.integers(2, 40))
+    for k in range(n_items):
+        name = specs[int(rng.integers(0, n_tenants))].name
+        # ~half the arrivals are stale: overdue (promoted) at compose time.
+        arrival = 0.0 if rng.random() < 0.5 else now + 1.0
+        sched.enqueue(name, ("item", name, k), arrival)
+        enq[name].append(("item", name, k))
+    deq = {s.name: [] for s in specs}
+    n_flushes = 0
+    while sched.total_waiting():
+        n_flushes += 1
+        assert n_flushes < 10 * n_items + 10, "scheduler failed to drain"
+        before = {s.name: s.slots_granted for s in sched.states()}
+        picked = sched.compose(now, cap)
+        assert 0 < len(picked) <= cap
+        grants = {s.name: s.slots_granted - before[s.name]
+                  for s in sched.states()}
+        assert sum(grants.values()) == len(picked)       # conservation
+        for s in sched.states():
+            assert s.deficit >= 0.0                      # charge floored
+            if not s.queue:
+                assert s.deficit == 0.0                  # standard reset
+        for name, item, _ in picked:
+            deq[name].append(item)
+    assert deq == enq                                    # FIFO per tenant
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +367,38 @@ def test_reserve_normalized_per_query():
         sched.enqueue("a", k, arrival_s=10.0)
     assert sched.next_deadline(cap=8) == pytest.approx(
         10.0 + 1.0 - 4 * st_.reserve_q_s)
+
+
+def test_reserve_tracks_full_charged_window():
+    """Regression (PR-5): the reserve EWMA must be fed the *full* flush
+    window the simulated clock charges — the batched solve plus each
+    query's initial AQE planning step inside ``session.admit()`` — not
+    just the ``tune_batch`` slice.  Replaying the EWMA over the recorded
+    per-flush clock charges must land exactly on the live reserve, which
+    is therefore ≥ the charged per-query clock cost folded at the EWMA
+    rate (the old under-measurement made it strictly smaller)."""
+    cfg = ServerConfig(max_batch=4, solve_reserve_s=0.0)
+    srv = OptimizerServer(config=cfg, weights=WEIGHTS, cfg=CFG)
+    stream = serving_stream("tpch", 10, seed=12,
+                            arrivals=ArrivalModel(kind="poisson",
+                                                  rate_qps=40.0))
+    srv.serve(stream)
+    windows = srv.last_run.flush_windows
+    assert len(windows) >= 2
+    a = srv.scheduler.reserve_ewma
+    replay = cfg.solve_reserve_s
+    for dt, n in windows:
+        assert dt > 0 and n > 0
+        replay = (1 - a) * replay + a * dt / n
+    got = srv.scheduler.state("default").reserve_q_s
+    assert got == pytest.approx(replay, rel=1e-9)
+    assert srv.scheduler.default_reserve_q_s == pytest.approx(replay,
+                                                              rel=1e-9)
+    # Convexity: an EWMA of per-query charges (seeded at 0) dominates the
+    # smallest charged per-query cost scaled by the folded-in weight — the
+    # "reserve ≥ charged per-query clock cost" convergence guarantee.
+    min_q = min(dt / n for dt, n in windows)
+    assert got >= (1 - (1 - a) ** len(windows)) * min_q
 
 
 def test_reserve_scales_only_own_tenant():

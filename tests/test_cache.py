@@ -169,6 +169,30 @@ def test_bank_reuse_not_restored_as_exact():
 # Multi-tenant cache isolation (tenant/preference key dimensions)
 # ---------------------------------------------------------------------------
 
+def test_peek_returns_banks_regardless_of_variant_policy():
+    """The degraded-path probe: banks come back for any variant of a
+    stored template (even with reuse_banks_across_variants=False), tagged
+    exact only when the fingerprint matches; stats are tracked separately
+    and the normal hit taxonomy is untouched."""
+    cache = EffectiveSetCache(reuse_banks_across_variants=False)
+    base = make_query("tpch", 2, variant=1)
+    variant = make_query("tpch", 2, variant=2)
+    svc = TuningService(cfg=CFG, cache=cache)
+    assert cache.peek(base, CFG, svc.model, svc.cost) is None
+    assert cache.stats()["peek_misses"] == 1
+    svc.tune_batch([base], (0.9, 0.1))                 # stores banks
+    eset, exact = cache.peek(base, CFG, svc.model, svc.cost)
+    assert exact and eset.opt_idx is not None
+    got = cache.peek(variant, CFG, svc.model, svc.cost)
+    assert got is not None
+    eset_v, exact_v = got
+    assert not exact_v and eset_v.opt_idx is not None  # approximate reuse
+    assert cache.stats()["peek_hits"] == 2
+    # The normal lookup path still strips banks for the variant.
+    assert cache.lookup(variant, CFG, svc.model, svc.cost).opt_idx is None
+    assert cache.stats()["structure_hits"] == 1
+
+
 def test_response_cache_isolates_tenants_with_different_weights():
     """Two tenants, byte-identical query structure, different preference
     vectors: neither may be served the other's weighted pick."""

@@ -104,6 +104,35 @@ def test_fingerprint_distinguishes_variants():
     assert query_fingerprint(a) == query_fingerprint(c)
 
 
+def test_default_theta_result_is_spark_defaults():
+    """The degraded-path fallback: Spark documentation defaults, believed
+    objectives from one stage evaluation per subQ, no Algorithm 1."""
+    from repro.core.tuning.compile_time import default_theta_result
+    from repro.core.tuning.spark_space import (theta_c_space, theta_p_space,
+                                               theta_s_space)
+    q = make_benchmark("tpch")[2]
+    res = default_theta_result(q)
+    np.testing.assert_allclose(res.theta_c, theta_c_space().default_raw())
+    # Every subQ runs the same default θp/θs row.
+    for row in res.theta_p_sub:
+        np.testing.assert_allclose(row, theta_p_space().default_raw())
+    for row in res.theta_s_sub:
+        np.testing.assert_allclose(row, theta_s_space().default_raw())
+    assert res.front.shape == (1, 2) and res.choice == 0
+    assert np.isfinite(res.front).all() and (res.front > 0).all()
+    assert res.n_evals == q.n_subqs
+    # Deterministic: same query → bit-identical fallback.
+    res2 = default_theta_result(q)
+    np.testing.assert_array_equal(res.front, res2.front)
+    np.testing.assert_array_equal(res.theta_p_sub, res2.theta_p_sub)
+
+
+def test_tune_batch_degraded_flags_validated(queries):
+    svc = TuningService(cfg=CFG)
+    with pytest.raises(ValueError, match="degrade flags"):
+        svc.tune_batch(queries, (0.9, 0.1), degraded=[True])
+
+
 def test_serving_stream_deterministic_and_repeats():
     s1 = serving_stream("tpch", 24, seed=5)
     s2 = serving_stream("tpch", 24, seed=5)

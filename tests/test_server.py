@@ -14,6 +14,7 @@ import pytest
 
 from repro.core.moo.hmooc import HMOOCConfig
 from repro.queryengine.workloads import (ArrivalModel, StreamRequest,
+                                         TenantSpec, multi_tenant_stream,
                                          serving_stream)
 from repro.serve import (OptimizerServer, RuntimeSession, ServerConfig,
                          TuningService)
@@ -313,6 +314,184 @@ def test_tenant_weights_actually_change_picks():
         ref = TuningService(cfg=CFG).tune_batch([q], w)[0]
         assert s.ct.choice == ref.choice
         np.testing.assert_array_equal(s.ct.theta_c, ref.theta_c)
+
+
+# ---------------------------------------------------------------------------
+# Overload: shedding / degrading never perturbs surviving queries (oracle)
+# ---------------------------------------------------------------------------
+
+def _overload_specs():
+    """Three SLO classes; strict/degrade budgets are unmeetable by
+    construction (budget 0 < any positive reserve), so triage decisions
+    are deterministic even though solve times are measured wall time."""
+    return [
+        TenantSpec(name="strict", slo="strict", solve_budget_s=0.0,
+                   arrivals=ArrivalModel(kind="poisson", rate_qps=50.0)),
+        TenantSpec(name="deg", slo="degrade", solve_budget_s=0.0,
+                   arrivals=ArrivalModel(kind="poisson", rate_qps=50.0)),
+        TenantSpec(name="be", slo="best_effort", weights=(0.5, 0.5),
+                   arrivals=ArrivalModel(kind="poisson", rate_qps=50.0)),
+    ]
+
+
+def test_overload_shed_degrade_survivors_bit_identical():
+    """Overloaded mixed-SLO stream: the strict tenant sheds everything
+    (budget 0), the degrade tenant resolves via the cheap path, and every
+    *surviving* full-quality query still bit-matches the offline pipeline
+    under its tenant's weights — shedding/degrading shapes who gets served,
+    never what the survivors are served."""
+    specs = _overload_specs()
+    reqs = multi_tenant_stream("tpch", specs, 5, seed=13)
+    srv = OptimizerServer(config=ServerConfig(max_batch=4), weights=WEIGHTS,
+                          cfg=CFG, tenants=specs)
+    served = srv.serve(reqs)
+    by = {name: [s for s in served if s.tenant == name]
+          for name in ("strict", "deg", "be")}
+    # Strict: all shed, first-class outcomes, nothing solved.
+    assert [s.status for s in by["strict"]] == ["shed"] * 5
+    assert all(s.ct is None and s.result is None for s in by["strict"])
+    assert all(math.isfinite(s.finished_s) for s in by["strict"])
+    assert srv.last_run.n_shed == 5
+    # Degrade: all admitted via the cheap path, and they did resolve.
+    assert [s.status for s in by["deg"]] == ["degraded"] * 5
+    assert all(s.result is not None for s in by["deg"])
+    assert srv.last_run.n_degraded == 5
+    # Best-effort absorbed the queueing at full quality...
+    assert [s.status for s in by["be"]] == ["served"] * 5
+    # ...and its outputs bit-match the offline pipeline under its weights.
+    queries = [s.request.query for s in by["be"]]
+    cts = TuningService(cfg=CFG).tune_batch(queries, (0.5, 0.5))
+    ref = RuntimeSession(weights=(0.5, 0.5)).run_batch(queries, cts)
+    _assert_same_outputs(by["be"], ref)
+    # Scheduler accounting matches the served statuses.
+    assert srv.scheduler.state("strict").n_shed == 5
+    assert srv.scheduler.state("deg").n_degraded == 5
+    assert srv.last_run.tenant_slots == {"deg": 5, "be": 5}
+
+
+def test_degraded_path_never_runs_fresh_algorithm1(monkeypatch):
+    """Zero fresh Algorithm 1 bank builds for degraded queries: with a warm
+    template cache the banks are reused across variants; with a cold cache
+    the Spark-default θ is served — `_optimize_rep_banks` must not run
+    either way."""
+    from repro.core.moo import hmooc as hmooc_mod
+    spec = TenantSpec(name="deg", slo="degrade", solve_budget_s=0.0,
+                      arrivals=ArrivalModel(kind="poisson", rate_qps=50.0))
+    reqs = multi_tenant_stream("tpch", [spec], 6, seed=14)
+    srv = OptimizerServer(config=ServerConfig(max_batch=3), weights=WEIGHTS,
+                          cfg=CFG, tenants=[spec])
+    calls = []
+    orig = hmooc_mod._optimize_rep_banks
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(hmooc_mod, "_optimize_rep_banks", spy)
+    served = srv.serve(reqs)
+    assert [s.status for s in served] == ["degraded"] * 6
+    assert all(s.result is not None for s in served)
+    assert not calls, "degraded solve triggered a fresh Algorithm 1 run"
+    # Cold cache ⇒ at least one request fell back to the Spark defaults.
+    assert srv.tuning.cache.stats()["peek_misses"] >= 1
+
+    # Now warm the template cache with full solves of the same queries and
+    # serve the degraded stream again: cheap solves reuse the banks — and
+    # still zero fresh Algorithm 1 runs for the degraded traffic.
+    monkeypatch.setattr(hmooc_mod, "_optimize_rep_banks", orig)
+    queries = list({s.request.query.qid: s.request.query
+                    for s in served}.values())
+    srv.tuning.tune_batch(queries, WEIGHTS)          # full-quality warmup
+    monkeypatch.setattr(hmooc_mod, "_optimize_rep_banks", spy)
+    srv2_reqs = multi_tenant_stream("tpch", [spec], 6, seed=14)
+    served2 = srv.serve(srv2_reqs)
+    assert [s.status for s in served2] == ["degraded"] * 6
+    assert not calls
+    assert srv.tuning.cache.stats()["peek_hits"] >= 1
+
+
+def test_degraded_exact_bank_reuse_matches_full_solve():
+    """A degraded request whose template banks were computed from the
+    *identical* query reuses them exactly: the cheap result equals the
+    full solve bit for bit (the degrade path costs quality only across
+    variants / cold caches)."""
+    from repro.queryengine.workloads import make_query
+    q = make_query("tpch", 4, variant=1)
+    svc = TuningService(cfg=CFG)
+    full = svc.tune_batch([q], WEIGHTS)[0]
+    cheap = svc.tune_batch([q], WEIGHTS, degraded=[True])[0]
+    # (The exact response cache may serve it directly; either way the
+    # degraded result must be the full-quality one.)
+    np.testing.assert_array_equal(cheap.front, full.front)
+    assert cheap.choice == full.choice
+    np.testing.assert_array_equal(cheap.theta_c, full.theta_c)
+    np.testing.assert_array_equal(cheap.theta_p_sub, full.theta_p_sub)
+
+    # And through a *fresh* service sharing only the effective-set cache
+    # (no response cache hit): exact bank reuse, still bit-identical.
+    svc2 = TuningService(cfg=CFG, cache=svc.cache)
+    cheap2 = svc2.tune_batch([q], WEIGHTS, degraded=[True])[0]
+    np.testing.assert_array_equal(cheap2.front, full.front)
+    assert cheap2.choice == full.choice
+    np.testing.assert_array_equal(cheap2.theta_c, full.theta_c)
+
+
+def test_degraded_approx_results_never_served_to_full_requests():
+    """Approximate degraded results live under a degrade-marked response
+    key: a later full-quality request for the same (query, weights) must
+    get a fresh exact solve, not the cross-variant approximation."""
+    from repro.queryengine.workloads import make_query
+    svc = TuningService(cfg=CFG)
+    base = make_query("tpch", 4, variant=1)
+    variant = make_query("tpch", 4, variant=2)
+    svc.tune_batch([base], WEIGHTS)                   # warm template banks
+    cheap = svc.tune_batch([variant], WEIGHTS, degraded=[True])[0]
+    assert svc.last_batch.n_cheap == 1
+    full = svc.tune_batch([variant], WEIGHTS)[0]
+    assert svc.last_batch.n_solved == 1               # not served the approx
+    ref = TuningService(cfg=CFG).tune_batch([variant], WEIGHTS)[0]
+    np.testing.assert_array_equal(full.front, ref.front)
+    assert full.choice == ref.choice
+    # The approximation is reused for later degraded requests, though.
+    again = svc.tune_batch([variant], WEIGHTS, degraded=[True])[0]
+    np.testing.assert_array_equal(again.front, cheap.front)
+
+
+def test_latency_report_mixed_finished_and_shed():
+    """One shed query must not NaN-poison the report (PR-5 bugfix):
+    percentiles and Jain aggregate over finished queries only, with shed
+    counts reported alongside."""
+    specs = [TenantSpec(name="strict", slo="strict", solve_budget_s=0.0,
+                        arrivals=ArrivalModel(kind="poisson", rate_qps=40.0)),
+             TenantSpec(name="be",
+                        arrivals=ArrivalModel(kind="poisson", rate_qps=40.0))]
+    reqs = multi_tenant_stream("tpch", specs, 4, seed=15)
+    srv = OptimizerServer(config=ServerConfig(max_batch=4), weights=WEIGHTS,
+                          cfg=CFG, tenants=specs)
+    rep = srv.latency_report(srv.serve(reqs))
+    assert rep["n_shed"] == 4 and rep["n_finished"] == 4
+    assert rep["shed_rate"] == pytest.approx(0.5)
+    for k in ("p50", "p99", "max", "mean"):
+        assert math.isfinite(rep["plan_latency_s"][k])
+        assert math.isfinite(rep["solve_latency_s"][k])
+    assert math.isfinite(rep["fairness_jain"])        # strict tenant dropped
+    assert 0.0 < rep["fairness_jain"] <= 1.0
+    per = rep["tenants"]
+    assert per["strict"]["n_shed"] == 4
+    assert per["strict"]["goodput"] == 0.0
+    assert math.isnan(per["strict"]["plan_latency_s"]["p99"])
+    assert per["be"]["n_shed"] == 0
+    assert math.isfinite(per["be"]["plan_latency_s"]["p99"])
+    assert rep["goodput"] <= 0.5
+
+
+def test_jain_index_ignores_nonfinite():
+    from repro.serve import jain_index
+    assert jain_index([1.0, 1.0, math.nan]) == pytest.approx(1.0)
+    assert jain_index([2.0, math.inf, 2.0]) == pytest.approx(1.0)
+    assert math.isnan(jain_index([math.nan]))
+    assert math.isnan(jain_index([]))
+    assert jain_index([1.0, 3.0]) == pytest.approx(16 / (2 * 10))
 
 
 def test_query_seed_threads_through():

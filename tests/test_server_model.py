@@ -145,6 +145,47 @@ def test_multi_tenant_model_backed_per_tenant_parity(models):
 
 
 # ---------------------------------------------------------------------------
+# Overload on the model backend: survivors still bit-match offline (PR-5)
+# ---------------------------------------------------------------------------
+
+def test_model_overload_survivors_bit_identical(models):
+    """Overloaded mixed-SLO stream on the *model* backend: strict requests
+    shed, degrade requests resolve via the cheap path, and the surviving
+    full-quality queries bit-match the offline model-backed pipeline per
+    tenant — the golden invariant holds under overload on both backends."""
+    msub, mqs = models
+    specs = [TenantSpec(name="strict", slo="strict", solve_budget_s=0.0,
+                        arrivals=ArrivalModel(rate_qps=40.0)),
+             TenantSpec(name="deg", slo="degrade", solve_budget_s=0.0,
+                        arrivals=ArrivalModel(rate_qps=40.0)),
+             TenantSpec(name="lat", weights=(0.9, 0.1),
+                        arrivals=ArrivalModel(rate_qps=40.0)),
+             TenantSpec(name="cost", weights=(0.2, 0.8),
+                        arrivals=ArrivalModel(rate_qps=40.0))]
+    reqs = multi_tenant_stream("tpch", specs, 4, seed=17)
+    srv = OptimizerServer(
+        config=ServerConfig(max_batch=3),
+        tuning=TuningService(model=msub, cfg=CFG),
+        session=RuntimeSession(model_subq=msub, model_qs=mqs,
+                               weights=WEIGHTS),
+        tenants=specs)
+    served = srv.serve(reqs)
+    by = {n: [s for s in served if s.tenant == n]
+          for n in ("strict", "deg", "lat", "cost")}
+    assert [s.status for s in by["strict"]] == ["shed"] * 4
+    assert [s.status for s in by["deg"]] == ["degraded"] * 4
+    assert all(s.result is not None for s in by["deg"])
+    for name, w in (("lat", (0.9, 0.1)), ("cost", (0.2, 0.8))):
+        sub = by[name]
+        assert [s.status for s in sub] == ["served"] * 4
+        queries = [s.request.query for s in sub]
+        cts = TuningService(model=msub, cfg=CFG).tune_batch(queries, w)
+        ref = RuntimeSession(model_subq=msub, model_qs=mqs,
+                             weights=w).run_batch(queries, cts)
+        _assert_same_outputs(sub, ref)
+
+
+# ---------------------------------------------------------------------------
 # γ contention features on the model path
 # ---------------------------------------------------------------------------
 
