@@ -19,6 +19,7 @@ Benchmarks → paper artifacts:
   server            (ours)       streaming-admission server latency/throughput
   server_tenants    (ours)       multi-tenant fairness + per-tenant p99/Jain
   server_overload   (ours)       overload shedding: SLO classes past capacity
+  server_model_solve (ours)      jitted model-backed solve vs legacy path
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -101,6 +102,8 @@ def main() -> None:
             b, n=64 if args.full else 32) for b in benches],
         "server_overload": lambda: [bench_server.run_overload(
             b, n=96 if args.full else 48) for b in benches],
+        "server_model_solve": lambda: [bench_server.run_model_solve(
+            b, n_batches=4 if args.full else 2) for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,
         "kernels": bench_cluster.run_kernels,

@@ -20,7 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+import hashlib
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +32,7 @@ from .features import batch_graphs, featurize_plan, featurize_subq
 from .gtn import GTNConfig, gtn_apply, gtn_apply_batch, gtn_init
 from .nn import Params, mlp, mlp_init
 
-__all__ = ["ModelConfig", "PerfModel", "NONDECISION_DIM"]
+__all__ = ["ModelConfig", "PerfModel", "NONDECISION_DIM", "pow2_bucket"]
 
 ALPHA_DIM = 5
 BETA_DIM = 3
@@ -63,6 +64,32 @@ class ModelConfig:
 TARGET_EPS = 1e-3
 
 
+def pow2_bucket(n: int, lo: int = 64) -> int:
+    """Smallest power of two ≥ max(n, lo).
+
+    Batched inference pads its row axis to these buckets so a serving
+    session only ever compiles O(log n_max) distinct signatures per jitted
+    function, however request sizes vary.
+    """
+    return max(lo, 1 << (max(n, 1) - 1).bit_length())
+
+
+def _head_max_bucket() -> int:
+    """Row cap per regressor dispatch (``REPRO_HEAD_MAX_BUCKET``).
+
+    Fused micro-batch solves can concatenate 100k+ rows; padding that to
+    the next power of two wastes up to 2× compute.  Instead the rows are
+    dispatched in chunks of at most this bucket: full chunks need no
+    padding at all, only the tail pads (to its own pow2 bucket ≤ the cap),
+    and the compiled-signature set stays the fixed ladder {64 … cap}.
+    Resolved per call so tests/benchmarks can re-tune it.
+    """
+    import os
+
+    b = int(os.environ.get("REPRO_HEAD_MAX_BUCKET", "8192"))
+    return pow2_bucket(b)
+
+
 class PerfModel:
     """Parameter container + jitted apply/predict paths.
 
@@ -89,6 +116,11 @@ class PerfModel:
                                      np.ones(cfg.n_targets)])
         self.target_stats = np.asarray(target_stats, np.float32)
         self._emb_cache: Dict[Any, np.ndarray] = {}
+        self._fp: Optional[str] = None
+        # Shape buckets seen by the padded batch paths (the recompilation
+        # bound the serving benchmarks assert against).
+        self.head_buckets: set = set()
+        self.embed_buckets: set = set()
 
         cfg_gtn = cfg.gtn
 
@@ -96,13 +128,16 @@ class PerfModel:
         def _embed_batch(p, X, pe, bias, mask):
             return gtn_apply_batch(p["gtn"], cfg_gtn, X, pe, bias, mask)
 
-        @jax.jit
-        def _head(p, emb, theta, nond):
+        def _head_fn(p, emb, theta, nond):
             x = jnp.concatenate([emb, theta, nond], axis=-1)
             return mlp(p["reg"], x)
 
+        self._head = jax.jit(_head_fn)
+        # Padded batches are throwaway buffers: donate them on accelerators
+        # (XLA reuses the space for the activations); CPU does not support
+        # donation, so the plain variant is kept for it.
+        self._head_donated = jax.jit(_head_fn, donate_argnums=(1, 2, 3))
         self._embed_batch = _embed_batch
-        self._head = _head
 
     # -- forward -------------------------------------------------------------
     def apply_rows(self, params: Params, graphs, theta: jnp.ndarray,
@@ -112,6 +147,27 @@ class PerfModel:
         emb = gtn_apply_batch(params["gtn"], self.cfg.gtn, X, pe, bias, mask)
         x = jnp.concatenate([emb, theta, nond], axis=-1)
         return mlp(params["reg"], x)
+
+    # -- identity -------------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable content hash of the model (params + config + target stats).
+
+        Serving caches key entries by this instead of ``id(model)``: the
+        fingerprint survives process restarts and model reloads, never pins
+        the live object, and an atomically swapped-in refreshed model gets a
+        different fingerprint so stale entries can never be served (see
+        ``ResponseCache.clear_model``).
+        """
+        if self._fp is None:
+            h = hashlib.sha1()
+            h.update(repr(self.cfg).encode())
+            h.update(np.ascontiguousarray(self.target_stats).tobytes())
+            for leaf in jax.tree_util.tree_leaves(self.params):
+                a = np.asarray(leaf)
+                h.update(str(a.shape).encode())
+                h.update(np.ascontiguousarray(a).tobytes())
+            self._fp = h.hexdigest()
+        return self._fp
 
     # -- inference -----------------------------------------------------------
     def embed(self, query: Query, sq_id: Optional[int] = None) -> np.ndarray:
@@ -128,6 +184,42 @@ class PerfModel:
                                     gb.mask)
             self._emb_cache[key] = np.asarray(emb[0])
         return self._emb_cache[key]
+
+    def embed_many(self, pairs: Sequence[Tuple[Query, Optional[int]]]) -> None:
+        """Fill the embedding cache for many (query, sq_id) pairs at once.
+
+        One padded GTN dispatch replaces the per-subQ batch-of-one calls of
+        :meth:`embed` — the cold-path hotspot of a model-backed micro-batch
+        solve.  The batch axis is padded to a power-of-two bucket (replicas
+        of the first graph, sliced off afterwards) so varying batch sizes
+        reuse a small fixed set of compiled signatures.  Per-row outputs are
+        identical to :meth:`embed`'s: row j of a padded batch equals the
+        batch-of-one embedding of graph j.
+        """
+        todo = []
+        seen = set()
+        for query, sq_id in pairs:
+            key = (id(query), query.qid, sq_id, self.cfg.kind)
+            if key in self._emb_cache or key in seen:
+                continue
+            seen.add(key)
+            if self.cfg.kind in ("subq", "qs"):
+                g = featurize_subq(query, sq_id, use_est=self.cfg.use_est,
+                                   n_pad=self.cfg.pad)
+            else:
+                g = featurize_plan(query, use_est=True, n_pad=self.cfg.pad)
+            todo.append((key, g))
+        if not todo:
+            return
+        n = len(todo)
+        b = pow2_bucket(n, lo=8)
+        graphs = [g for _, g in todo] + [todo[0][1]] * (b - n)
+        gb = batch_graphs(graphs)
+        self.embed_buckets.add(b)
+        emb = np.asarray(self._embed_batch(self.params, gb.X, gb.pe,
+                                           gb.bias, gb.mask))
+        for j, (key, _) in enumerate(todo):
+            self._emb_cache[key] = emb[j]
 
     # -- target transform ------------------------------------------------------
     def to_z(self, y: np.ndarray) -> np.ndarray:
@@ -156,6 +248,60 @@ class PerfModel:
         z = self._head(self.params, embb, theta,
                        np.asarray(nond, np.float32))
         return self.from_z(np.asarray(z))
+
+    def predict_rows(self, emb: np.ndarray, theta: np.ndarray,
+                     nond: np.ndarray) -> np.ndarray:
+        """Like :meth:`predict` but per-row emb/nond, bucket-padded.
+
+        The fused solve path concatenates regressor rows from every
+        (query, subQ, candidate) of a micro-batch into one call here.  Rows
+        are zero-padded to a power-of-two bucket so the compile cache sees
+        O(log n_max) signatures across a serving session, and the padded
+        buffers are donated to XLA on accelerator backends.  Per-row
+        outputs equal :meth:`predict`'s on the same rows.
+        """
+        emb = np.ascontiguousarray(emb, np.float32)
+        theta = np.ascontiguousarray(theta, np.float32)
+        nond = np.ascontiguousarray(nond, np.float32)
+        n = theta.shape[0]
+        cap = _head_max_bucket()
+        head = self._head if jax.default_backend() == "cpu" \
+            else self._head_donated
+        outs = []
+        for off in range(0, n, cap):
+            e = emb[off:off + cap]
+            t = theta[off:off + cap]
+            d = nond[off:off + cap]
+            c = t.shape[0]
+            # Calls larger than the cap reuse the cap signature for their
+            # tail too (waste < cap rows on a multi-cap call); only calls
+            # that fit in one chunk get a smaller bucket of the ladder.
+            b = cap if n > cap else pow2_bucket(c)
+            if b != c:
+                ep = np.zeros((b, e.shape[1]), np.float32)
+                ep[:c] = e
+                tp = np.zeros((b, t.shape[1]), np.float32)
+                tp[:c] = t
+                dp = np.zeros((b, d.shape[1]), np.float32)
+                dp[:c] = d
+                e, t, d = ep, tp, dp
+            self.head_buckets.add((b, theta.shape[1]))
+            z = head(self.params, e, t, d)
+            outs.append(np.asarray(z[:c]))
+        return self.from_z(outs[0] if len(outs) == 1
+                           else np.concatenate(outs, 0))
+
+    def compile_stats(self) -> dict:
+        """Signature accounting for the recompilation-bound assertions."""
+        def _cache_size(f):
+            try:
+                return int(f._cache_size())
+            except Exception:
+                return -1
+        return {"head_buckets": sorted(self.head_buckets),
+                "embed_buckets": sorted(self.embed_buckets),
+                "head_compiles": _cache_size(self._head),
+                "embed_compiles": _cache_size(self._embed_batch)}
 
     # -- persistence ----------------------------------------------------------
     def save(self, path: str) -> None:

@@ -46,7 +46,7 @@ from . import pareto as _pareto
 from .pareto import pareto_mask_fast, pareto_mask_np
 
 __all__ = ["HMOOCConfig", "HMOOCResult", "EffectiveSet", "hmooc_solve",
-           "subq_tuning", "build_candidates", "dag_aggregate",
+           "HmoocPlan", "subq_tuning", "build_candidates", "dag_aggregate",
            "minkowski_merge_2d"]
 
 StageEval = Callable[[int, np.ndarray, np.ndarray], np.ndarray]
@@ -201,6 +201,16 @@ def build_candidates(
     return EffectiveSet(Uc=Uc, labels=labels, reps=reps, pool=pool)
 
 
+def _rep_bank_requests(m: int, eset: EffectiveSet
+                       ) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+    """The stage-eval rows of the representative-MOO phase, per subQ."""
+    reps, pool = eset.reps, eset.pool
+    C, P = reps.shape[0], pool.shape[0]
+    Tc = np.repeat(reps, P, axis=0)
+    Tp = np.tile(pool, (C, 1))
+    return [(i, Tc, Tp) for i in range(m)]
+
+
 def _optimize_rep_banks(
     stage_eval: StageEval,
     m: int,
@@ -211,14 +221,11 @@ def _optimize_rep_banks(
 
     Returns (opt_idx [C][m], k_obj, n_evals).
     """
-    reps, pool = eset.reps, eset.pool
-    C, P = reps.shape[0], pool.shape[0]
-    Tc = np.repeat(reps, P, axis=0)
-    Tp = np.tile(pool, (C, 1))
+    C, P = eset.reps.shape[0], eset.pool.shape[0]
     opt_idx: List[List[np.ndarray]] = [[] for _ in range(C)]
     k_obj = 2
     n_evals = 0
-    for i in range(m):
+    for i, Tc, Tp in _rep_bank_requests(m, eset):
         F = stage_eval(i, Tc, Tp)
         n_evals += F.shape[0]
         k_obj = F.shape[1]
@@ -228,26 +235,24 @@ def _optimize_rep_banks(
     return opt_idx, k_obj, n_evals
 
 
-def _assign_banks(
-    stage_eval: StageEval,
-    m: int,
-    eset: EffectiveSet,
-    cfg: HMOOCConfig,
-    k_obj: int,
-) -> Tuple[np.ndarray, np.ndarray, int]:
-    """Lines 4/7: evaluate members against their rep's optimal θp sets.
+def _assign_requests(m: int, eset: EffectiveSet, cfg: HMOOCConfig) -> List[
+        Optional[Tuple[np.ndarray, np.ndarray,
+                       List[Tuple[np.ndarray, np.ndarray]]]]]:
+    """Per-subQ (θc rows, θp⊕θs rows, scatter chunks) of the assign phase.
 
-    One stage_eval per subQ covering every (member, bank slot) pair at once.
+    Entry i is None when subQ i has nothing to evaluate (no members or all
+    banks empty).  Deterministic in ``eset``: rebuilding the requests for
+    the same effective set yields the same rows, which is what lets a batch
+    driver evaluate them externally and replay the results into
+    :func:`_assign_banks`.
     """
     Uc, labels, pool = eset.Uc, eset.labels, eset.pool
     opt_idx = eset.opt_idx
     assert opt_idx is not None
     C = eset.reps.shape[0]
-    N, B = Uc.shape[0], cfg.max_bank
-    F_bank = np.full((N, m, B, k_obj), np.inf)
-    idx_bank = np.full((N, m, B), -1, int)
+    B = cfg.max_bank
     members_by_rep = [np.nonzero(labels == r)[0] for r in range(C)]
-    n_evals = 0
+    out = []
     for i in range(m):
         rows_c: List[np.ndarray] = []
         rows_p: List[np.ndarray] = []
@@ -262,9 +267,33 @@ def _assign_banks(
             rows_p.append(np.tile(sel, members.size))
             chunks.append((members, sel))
         if not chunks:
+            out.append(None)
             continue
-        F = stage_eval(i, Uc[np.concatenate(rows_c)],
-                       pool[np.concatenate(rows_p)])
+        out.append((Uc[np.concatenate(rows_c)],
+                    pool[np.concatenate(rows_p)], chunks))
+    return out
+
+
+def _assign_banks(
+    stage_eval: StageEval,
+    m: int,
+    eset: EffectiveSet,
+    cfg: HMOOCConfig,
+    k_obj: int,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Lines 4/7: evaluate members against their rep's optimal θp sets.
+
+    One stage_eval per subQ covering every (member, bank slot) pair at once.
+    """
+    N, B = eset.Uc.shape[0], cfg.max_bank
+    F_bank = np.full((N, m, B, k_obj), np.inf)
+    idx_bank = np.full((N, m, B), -1, int)
+    n_evals = 0
+    for i, req in enumerate(_assign_requests(m, eset, cfg)):
+        if req is None:
+            continue
+        Tc_rows, Tp_rows, chunks = req
+        F = stage_eval(i, Tc_rows, Tp_rows)
         n_evals += F.shape[0]
         off = 0
         for members, sel in chunks:
@@ -374,16 +403,12 @@ def _ws_pick(Fn: np.ndarray, W: np.ndarray) -> np.ndarray:
     return np.argmin(scores, axis=-1)
 
 
-def _hmooc2_all(F_bank: np.ndarray, idx_bank: np.ndarray, n_weights: int
-                ) -> List[Tuple[np.ndarray, np.ndarray]]:
-    """WS-over-functions aggregation (Alg. 4), batched over θc candidates.
-
-    Returns per-candidate (front (q, k), sel (q, m)) pairs.
-    """
-    N, m, B, k = F_bank.shape
-    assert k == 2
+def _ws_weights(n_weights: int) -> np.ndarray:
     ws = np.linspace(0.0, 1.0, n_weights)
-    W = np.stack([ws, 1.0 - ws], axis=1)                 # (nw, 2)
+    return np.stack([ws, 1.0 - ws], axis=1)              # (nw, 2)
+
+
+def _hmooc2_normalize(F_bank: np.ndarray) -> np.ndarray:
     # Normalize per OBJECTIVE over each candidate's whole bank (one affine
     # transform shared by every subQ).  The paper's Alg. 4 normalizes per
     # subQ, but per-subQ scales give each subQ different effective weights
@@ -396,7 +421,19 @@ def _hmooc2_all(F_bank: np.ndarray, idx_bank: np.ndarray, n_weights: int
     span = np.where(hi > lo, hi - lo, 1.0)
     with np.errstate(invalid="ignore"):
         Fn = (F_bank - lo) / span
-    Fn = np.where(finite, Fn, 1e18)
+    return np.where(finite, Fn, 1e18)
+
+
+def _hmooc2_all(F_bank: np.ndarray, idx_bank: np.ndarray, n_weights: int
+                ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """WS-over-functions aggregation (Alg. 4), batched over θc candidates.
+
+    Returns per-candidate (front (q, k), sel (q, m)) pairs.
+    """
+    N, m, B, k = F_bank.shape
+    assert k == 2
+    W = _ws_weights(n_weights)
+    Fn = _hmooc2_normalize(F_bank)
     j = _ws_pick(Fn, W)                                  # (nw, N, m)
     jj = np.transpose(j, (1, 0, 2))                      # (N, nw, m)
     cc = np.arange(N)[:, None, None]
@@ -422,6 +459,33 @@ def _hmooc2_fixed_c(Fb: np.ndarray, Ib: np.ndarray, n_weights: int
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """WS-over-functions aggregation under one θc (Alg. 4)."""
     return _hmooc2_all(Fb[None], Ib[None], n_weights)[0]
+
+
+def _hmooc2_all_fused(Uc: np.ndarray, pool: np.ndarray, F_bank: np.ndarray,
+                      idx_bank: np.ndarray, n_weights: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Kernel-regime HMOOC2: the whole aggregation in one compiled solve.
+
+    Composes the ``ws_reduce`` picks, the objective-sum gather, the
+    per-candidate dominance mask and the final global Pareto filter under a
+    single jit (``repro.kernels.fused_solve``) instead of bouncing
+    intermediate banks between host and device per candidate.  Returns the
+    already-globally-filtered (front, theta_c, theta_ps) in the same row
+    order the per-candidate numpy route produces (candidate-major, weight
+    ascending), with its same f32 score/compare semantics.
+    """
+    from ...kernels.fused_solve import fused_ws_front  # lazy: optional layer
+    N, m, B, k = F_bank.shape
+    assert k == 2
+    W = _ws_weights(n_weights)
+    Fn = _hmooc2_normalize(F_bank)
+    jj, P_all, keep = fused_ws_front(Fn, F_bank, W)
+    cc = np.arange(N)[:, None, None]
+    ii = np.arange(m)[None, None, :]
+    S = idx_bank[cc, ii, jj]                             # (N, nw, m)
+    keep_c, keep_w = np.nonzero(keep)
+    theta_ps = pool[np.maximum(S[keep_c, keep_w], 0)]    # (q, m, d_ps)
+    return P_all[keep_c, keep_w], Uc[keep_c], theta_ps
 
 
 def _hmooc3_extremes(F_bank: np.ndarray, idx_bank: np.ndarray
@@ -477,6 +541,9 @@ def dag_aggregate(
 
     fronts, tcs, sels = [], [], []
     if method == "hmooc2":
+        if N * m * B * n_ws_weights >= _ws_min_scores():
+            return _hmooc2_all_fused(Uc, pool, F_bank, idx_bank,
+                                     n_ws_weights)
         per_c: Sequence[Tuple[np.ndarray, np.ndarray]] = \
             _hmooc2_all(F_bank, idx_bank, n_ws_weights)
     elif method == "hmooc1":
@@ -550,3 +617,108 @@ def hmooc_solve(
                        extras={"n_theta_c": float(eset.Uc.shape[0]),
                                "reused_banks": float(reused_banks)},
                        effective_set=eset)
+
+
+class HmoocPlan:
+    """Externally-driven :func:`hmooc_solve`: one query's solve as a
+    two-phase state machine whose stage evaluations are surfaced as request
+    lists instead of executed inline.
+
+    A batch driver (``repro.serve.service``) holds one plan per in-flight
+    query, fuses every plan's pending requests into a single batched model
+    dispatch per round, and feeds the results back — so a micro-batch of M
+    queries costs two regressor calls total instead of 2·M·m.  The
+    arithmetic is :func:`hmooc_solve`'s exactly: each phase replays the fed
+    results through the same :func:`_optimize_rep_banks` /
+    :func:`_assign_banks` the sequential solve calls (request row-building
+    is deterministic in the effective set, so the replayed rows are the
+    rows the results were computed on).
+
+    Protocol: while ``not plan.done``, call ``requests()`` (a list of
+    ``(i, Tc, Tps)`` stage requests), evaluate them externally, and pass
+    the aligned objective arrays to ``feed()``.  ``banks_ready`` flips
+    after the first phase, at which point ``eset`` carries the optimal-θp
+    banks — a driver hands it to same-template plans to reuse, mirroring a
+    sequential store→lookup between their solves.
+    """
+
+    def __init__(self, m: int, d_c: int, d_ps: int,
+                 cfg: HMOOCConfig = HMOOCConfig(), *,
+                 snap_c=None, snap_ps=None,
+                 effective_set: Optional[EffectiveSet] = None):
+        self._t0 = time.perf_counter()
+        self.m, self.cfg = m, cfg
+        self.n_evals = 0
+        self.reused_banks = False
+        self.result: Optional[HMOOCResult] = None
+        if effective_set is None:
+            rng = np.random.default_rng(cfg.seed)
+            self.eset = build_candidates(d_c, d_ps, cfg, snap_c=snap_c,
+                                         snap_ps=snap_ps, rng=rng)
+        else:
+            self.eset = effective_set
+        if self.eset.opt_idx is not None and len(self.eset.opt_idx[0]) == m:
+            self.k_obj = self.eset.k_obj
+            self.reused_banks = True
+            self._phase = "assign"
+        else:
+            self.k_obj = 2
+            self._phase = "banks"
+        self._reqs: Optional[List[Tuple[int, np.ndarray, np.ndarray]]] = None
+
+    @property
+    def done(self) -> bool:
+        return self._phase == "done"
+
+    @property
+    def banks_ready(self) -> bool:
+        return self._phase in ("assign", "done")
+
+    def requests(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+        # Row-building is deterministic in (eset, cfg), so the per-phase
+        # request list is memoized: the driver calls this once to collect
+        # work and feed() consumes it again to align results.
+        if self._reqs is not None:
+            return self._reqs
+        if self._phase == "banks":
+            self._reqs = _rep_bank_requests(self.m, self.eset)
+        elif self._phase == "assign":
+            self._reqs = [(i, req[0], req[1]) for i, req in
+                          enumerate(_assign_requests(self.m, self.eset,
+                                                     self.cfg))
+                          if req is not None]
+        else:
+            raise RuntimeError("plan is already done")
+        return self._reqs
+
+    def feed(self, results: Sequence[np.ndarray]) -> None:
+        """Advance one phase with the objective arrays for ``requests()``."""
+        fmap = {i: F for (i, _, _), F in zip(self.requests(), results)}
+
+        def replay(i, Tc, Tps):
+            return fmap[i]
+
+        if self._phase == "banks":
+            opt_idx, k_obj, n1 = _optimize_rep_banks(replay, self.m,
+                                                     self.eset, self.cfg)
+            self.eset = dataclasses.replace(self.eset, opt_idx=opt_idx,
+                                            k_obj=k_obj)
+            self.k_obj = k_obj
+            self.n_evals += n1
+            self._phase = "assign"
+            self._reqs = None
+            return
+        F_bank, idx_bank, n2 = _assign_banks(replay, self.m, self.eset,
+                                             self.cfg, self.k_obj)
+        self.n_evals += n2
+        front, theta_c, theta_ps = dag_aggregate(
+            self.eset.Uc, self.eset.pool, F_bank, idx_bank,
+            self.cfg.dag_method, n_ws_weights=self.cfg.n_ws_weights)
+        self.result = HMOOCResult(
+            front=front, theta_c=theta_c, theta_ps=theta_ps,
+            solve_time=time.perf_counter() - self._t0, n_evals=self.n_evals,
+            extras={"n_theta_c": float(self.eset.Uc.shape[0]),
+                    "reused_banks": float(self.reused_banks)},
+            effective_set=self.eset)
+        self._phase = "done"
+        self._reqs = None

@@ -184,6 +184,14 @@ def pareto_mask_fast(F: np.ndarray,
     only O(log n) distinct shapes across a serving session.  The kernel
     compares in float32; the numpy fallback keeps float64 — callers that
     need bit-stable fronts on CPU get them by default (see ``_KERNEL_MIN_N``).
+
+    Routing is tie-tolerant: when any objective column holds values that
+    are distinct in float64 but collide after the kernel's float32 cast,
+    the dominance relation itself would change under the cast (a strictly
+    dominated point can tie its dominator and survive), so such inputs
+    take the float64 numpy path regardless of size.  This keeps the mask a
+    pure function of the input values rather than of the backend the batch
+    happened to route to.
     """
     F = np.asarray(F, np.float64)
     n = F.shape[0]
@@ -191,7 +199,19 @@ def pareto_mask_fast(F: np.ndarray,
         else _default_kernel_min_n()
     if n < thr or n == 0:
         return pareto_mask_np(F, valid)
+    if _f32_tie_hazard(F):
+        return pareto_mask_np(F, valid)
     return _pareto_mask_kernel(F, valid)
+
+
+def _f32_tie_hazard(F: np.ndarray) -> bool:
+    """True if float64-distinct values in some column tie as float32."""
+    for j in range(F.shape[1]):
+        col = F[:, j]
+        u = np.unique(col[np.isfinite(col)])
+        if np.unique(u.astype(np.float32)).size < u.size:
+            return True
+    return False
 
 
 def _pareto_mask_kernel(F: np.ndarray,

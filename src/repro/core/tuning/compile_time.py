@@ -17,10 +17,10 @@ from ..models.perf_model import PerfModel
 from ..moo.hmooc import EffectiveSet, HMOOCConfig, HMOOCResult, hmooc_solve
 from ..moo.wun import wun_select
 from .aggregation import aggregate_submission_theta
-from .objectives import StageObjectives
+from .objectives import StageObjectives, fused_stage_eval
 
 __all__ = ["CompileTimeResult", "compile_time_optimize",
-           "default_theta_result"]
+           "default_theta_result", "finish_result"]
 
 
 @dataclasses.dataclass
@@ -88,6 +88,17 @@ def compile_time_optimize(
     if (cache is not None and res.effective_set is not None
             and not res.extras.get("reused_banks")):
         cache.store(query, cfg, res.effective_set, model, cost)
+    return finish_result(query, obj, res, weights, t0)
+
+
+def finish_result(query: Query, obj: StageObjectives, res: HMOOCResult,
+                  weights: Tuple[float, float], t0: float
+                  ) -> CompileTimeResult:
+    """WUN selection + raw-space extraction after an HMOOC solve.
+
+    Shared by :func:`compile_time_optimize` and the serving layer's batched
+    solve driver, so both finish a solve with identical arithmetic.
+    """
     if res.front.shape[0] == 0:
         raise RuntimeError(f"HMOOC produced no solutions for {query.qid}")
     choice, _ = wun_select(res.front, np.asarray(weights))
@@ -127,9 +138,14 @@ def default_theta_result(
     tps_u = np.tile(np.concatenate([obj.ps.default_unit(),
                                     obj.ss.default_unit()]),
                     (obj.m, 1))                                 # (m, d_ps)
+    # One batched dispatch across all subQs (the oracle backend keeps the
+    # exact per-subQ evaluation); the sum stays a left-to-right
+    # accumulation so the reduction order matches the historical loop.
+    evals = fused_stage_eval(
+        [(obj, i, tc_u, tps_u[i:i + 1]) for i in range(obj.m)])
     front = np.zeros((1, 2), np.float64)
-    for i in range(obj.m):
-        front[0] += obj.stage_eval(i, tc_u, tps_u[i:i + 1])[0]
+    for F in evals:
+        front[0] += F[0]
     tc_raw, tp_raw, ts_raw = obj.split_raw(tc_u, tps_u)
     theta_p0, theta_s0 = aggregate_submission_theta(query, tp_raw, ts_raw)
     return CompileTimeResult(

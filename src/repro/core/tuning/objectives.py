@@ -18,7 +18,7 @@ list-structured DAG aggregation (paper §5.1.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,7 +28,8 @@ from ...queryengine.trace import _alpha_stats
 from ..models.perf_model import PerfModel, make_nondecision
 from .spark_space import theta_c_space, theta_p_space, theta_s_space
 
-__all__ = ["StageObjectives", "resource_rate", "QueryObjective"]
+__all__ = ["StageObjectives", "resource_rate", "QueryObjective",
+           "fused_stage_eval", "StageRequest"]
 
 
 def resource_rate(tc_raw: np.ndarray, cost: CostModel = DEFAULT_COST
@@ -54,6 +55,9 @@ class StageObjectives:
         self.d_ps = self.ps.dim + self.ss.dim
         self.m = query.n_subqs
         if model is not None:
+            # One batched GTN dispatch covers all subQs (a cache no-op when
+            # the serving layer already prefetched the whole micro-batch).
+            model.embed_many([(query, i) for i in range(self.m)])
             self._embs = [model.embed(query, i) for i in range(self.m)]
             self._nond = [make_nondecision(_alpha_stats(
                 sq.est_input_rows, sq.est_input_bytes))
@@ -82,9 +86,7 @@ class StageObjectives:
         """(n, d_c) ⊕ (n, d_ps) unit rows → (n, 2) [latency, cost]."""
         tc_raw, tp_raw, ts_raw = self.split_raw(Tc, Tps)
         if self.model is not None:
-            theta = np.concatenate(
-                [Tc, Tps[..., :self.ps.dim], Tps[..., self.ps.dim:]],
-                -1).astype(np.float32)
+            theta = self.theta_rows(Tc, Tps)
             pred = self.model.predict(self._embs[i], theta, self._nond[i])
             lat, io = pred[:, 0], pred[:, 1]
         else:
@@ -95,6 +97,12 @@ class StageObjectives:
         dollars = lat * resource_rate(tc_raw, self.cost) \
             + io * self.cost.price_io_gb
         return np.stack([lat, dollars], -1)
+
+    def theta_rows(self, Tc: np.ndarray, Tps: np.ndarray) -> np.ndarray:
+        """Regressor θ layout for unit rows: [θc ⊕ θp ⊕ θs], float32."""
+        return np.concatenate(
+            [Tc, Tps[..., :self.ps.dim], Tps[..., self.ps.dim:]],
+            -1).astype(np.float32)
 
     # -- flat query-level evaluators for the baselines -------------------------
     def query_eval_fine(self) -> Tuple[Callable[[np.ndarray], np.ndarray], int]:
@@ -127,3 +135,58 @@ class StageObjectives:
 
 
 QueryObjective = Callable[[np.ndarray], np.ndarray]
+
+# One stage-evaluation request: (objectives, subQ index, θc rows, θp⊕θs rows).
+StageRequest = Tuple["StageObjectives", int, np.ndarray, np.ndarray]
+
+
+def fused_stage_eval(items: Sequence[StageRequest]) -> List[np.ndarray]:
+    """Evaluate many stage requests — across subQs *and* queries — at once.
+
+    The model-backed path concatenates every request's regressor rows
+    (per-row embedding ⊕ θ ⊕ nondecision) into a single bucket-padded
+    :meth:`PerfModel.predict_rows` dispatch, then finishes the float64
+    latency→dollars arithmetic per request.  Per-request outputs are
+    identical to calling ``obj.stage_eval(i, Tc, Tps)`` one by one: row j of
+    a padded batch equals row j of the per-request call, and the cost
+    arithmetic is element-wise.  All requests must share one model (the
+    serving layer batches per service); the oracle backend (``model is
+    None``) falls back to per-request evaluation, which is already one
+    vectorized simulator call each.
+    """
+    if not items:
+        return []
+    model = items[0][0].model
+    if model is None:
+        return [obj.stage_eval(i, Tc, Tps) for obj, i, Tc, Tps in items]
+    if any(it[0].model is not model for it in items):
+        raise ValueError("fused_stage_eval requires one shared model")
+    thetas, metas = [], []
+    for obj, i, Tc, Tps in items:
+        tc_raw, _, _ = obj.split_raw(Tc, Tps)
+        theta = obj.theta_rows(Tc, Tps)
+        thetas.append(theta)
+        metas.append((obj, i, theta.shape[0], tc_raw))
+    total = sum(n for _, _, n, _ in metas)
+    emb0 = items[0][0]._embs[items[0][1]]
+    nond0 = items[0][0]._nond[items[0][1]]
+    # Per-row emb/nond are broadcast straight into the dispatch buffers —
+    # no per-request np.repeat intermediates on the host.
+    emb_all = np.empty((total, emb0.shape[0]), np.float32)
+    nond_all = np.empty((total, nond0.shape[0]), np.float32)
+    off = 0
+    for obj, i, n, _ in metas:
+        emb_all[off:off + n] = obj._embs[i]
+        nond_all[off:off + n] = obj._nond[i]
+        off += n
+    pred = model.predict_rows(emb_all, np.concatenate(thetas, 0), nond_all)
+    out: List[np.ndarray] = []
+    off = 0
+    for obj, _, n, tc_raw in metas:
+        p = pred[off:off + n]
+        off += n
+        lat, io = p[:, 0], p[:, 1]
+        dollars = lat * resource_rate(tc_raw, obj.cost) \
+            + io * obj.cost.price_io_gb
+        out.append(np.stack([lat, dollars], -1))
+    return out

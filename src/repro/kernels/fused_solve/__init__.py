@@ -1,0 +1,3 @@
+from .ops import fused_ws_front, SEEN_BUCKETS
+
+__all__ = ["fused_ws_front", "SEEN_BUCKETS"]

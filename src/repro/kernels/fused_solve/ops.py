@@ -1,0 +1,105 @@
+"""Fused HMOOC2 aggregation: ws_reduce + pareto_filter in one compiled solve.
+
+The kernel-regime HMOOC2 path used to make three round-trips per
+aggregation: the ``ws_reduce`` argmin picks, a host-side gather/sum of the
+picked bank rows, and per-candidate + global dominance masks through
+``pareto_filter``.  :func:`fused_ws_front` composes all of it under a single
+``jax.jit``: one MXU weighted-sum reduction, the objective-sum gather, the
+per-candidate dominance mask over the weight picks, and the final global
+Pareto filter across every (candidate, weight) point — with the padded input
+buffers donated to XLA on accelerator backends.
+
+Shape policy: the candidate axis N and the subQ axis m are padded to
+power-of-two buckets (tracked in :data:`SEEN_BUCKETS`), so a serving session
+compiles O(log N_max · log m_max) signatures however query shapes vary.
+Padded candidates carry +inf banks (never valid); padded subQs carry
+all-zero banks (their picks contribute zero to every objective sum and are
+sliced off before returning).
+
+Numerical semantics match the pre-fusion kernel regime: weighted-sum scores
+and the global dominance compare in float32 (the usual Pallas-kernel tie
+caveat), objective sums and the per-candidate mask keep float64.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..pareto_filter.kernel import pareto_filter_pallas
+from ..ws_reduce.kernel import ws_reduce_pallas
+
+__all__ = ["fused_ws_front", "SEEN_BUCKETS"]
+
+# (N bucket, m bucket, B, k, nw) signatures dispatched so far — the
+# recompilation-bound benchmarks assert this stays ≤ the bucket count.
+SEEN_BUCKETS: set = set()
+
+
+def _pow2(n: int, lo: int) -> int:
+    return max(lo, 1 << (max(n, 1) - 1).bit_length())
+
+
+def _local_mask(P: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Non-dominated mask over one candidate's (nw, k) weight picks."""
+    le = (P[:, None, :] <= P[None, :, :]).all(-1)
+    lt = (P[:, None, :] < P[None, :, :]).any(-1)
+    dom = ((le & lt) & v[:, None]).any(0)
+    return v & ~dom
+
+
+def _fused_impl(Fn, Fb, W, *, interpret: bool):
+    Np, mp, B, k = Fn.shape
+    nw = W.shape[0]
+    # One MXU pass over every (candidate, subQ) bank.
+    _, idx = ws_reduce_pallas(Fn.reshape(Np * mp, B, k), W,
+                              interpret=interpret)        # (nw, Np*mp)
+    jj = idx.T.reshape(Np, mp, nw).transpose(0, 2, 1)     # (Np, nw, mp)
+    cc = jnp.arange(Np)[:, None, None]
+    ii = jnp.arange(mp)[None, None, :]
+    G = Fb[cc, ii, jj]                                    # (Np, nw, mp, k)
+    P_all = G.sum(axis=2)                                 # (Np, nw, k)
+    ok = jnp.isfinite(G).all(axis=(2, 3))                 # (Np, nw)
+    local = jax.vmap(_local_mask)(P_all, ok)
+    keep = pareto_filter_pallas(
+        P_all.reshape(Np * nw, k).astype(jnp.float32),
+        (ok & local).reshape(-1), interpret=interpret).reshape(Np, nw)
+    return jj, P_all, keep
+
+
+_fused = jax.jit(_fused_impl, static_argnames=("interpret",))
+# Padded buffers are single-use: donate them on accelerator backends.
+_fused_donated = jax.jit(_fused_impl, static_argnames=("interpret",),
+                         donate_argnums=(0, 1))
+
+
+def fused_ws_front(Fn: np.ndarray, F_bank: np.ndarray, W: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(N, m, B, k) normalized scores + raw banks + (nw, k) weights →
+    (jj (N, nw, m) picks, P_all (N, nw, k) objective sums, keep (N, nw)).
+
+    ``keep`` composes validity, the per-candidate dominance mask over the
+    weight picks, and the global Pareto filter across all candidates —
+    ``P_all[keep]`` is the query-level front, already globally filtered.
+    """
+    N, m, B, k = F_bank.shape
+    nw = W.shape[0]
+    Np, mp = _pow2(N, 32), _pow2(m, 4)
+    SEEN_BUCKETS.add((Np, mp, B, k, nw))
+    Fnp = np.zeros((Np, mp, B, k), np.float32)
+    Fnp[:N, :m] = Fn
+    Fnp[N:] = 1e18
+    Fbp = np.zeros((Np, mp, B, k), np.float64)
+    Fbp[:N, :m] = F_bank
+    Fbp[N:] = np.inf
+    on_cpu = jax.default_backend() == "cpu"
+    fn = _fused if on_cpu else _fused_donated
+    with jax.experimental.enable_x64():
+        jj, P_all, keep = fn(jnp.asarray(Fnp), jnp.asarray(Fbp),
+                             jnp.asarray(W, jnp.float32),
+                             interpret=on_cpu)
+    return (np.asarray(jj)[:N, :, :m], np.asarray(P_all)[:N],
+            np.asarray(keep)[:N])

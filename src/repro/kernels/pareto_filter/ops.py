@@ -15,7 +15,13 @@ from .ref import pareto_mask_ref
 
 __all__ = ["pareto_filter", "pareto_mask_ref"]
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _default_interpret() -> bool:
+    # Resolved per call, not at import: the active backend can change after
+    # this module is imported (jax.default_device, distributed init, tests
+    # faking a backend), and a frozen import-time answer would silently
+    # interpret-mode TPU runs or try to compile on CPU.
+    return jax.default_backend() != "tpu"
 
 
 def pareto_filter(F: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
@@ -25,5 +31,5 @@ def pareto_filter(F: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
     if valid is None:
         valid = jnp.isfinite(F).all(-1)
     if interpret is None:
-        interpret = not _ON_TPU
+        interpret = _default_interpret()
     return pareto_filter_pallas(F, valid, interpret=interpret)

@@ -11,7 +11,13 @@ from .ref import ws_reduce_ref
 
 __all__ = ["ws_reduce", "ws_reduce_ref"]
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _default_interpret() -> bool:
+    # Resolved per call, not at import: the active backend can change after
+    # this module is imported (jax.default_device, distributed init, tests
+    # faking a backend), and a frozen import-time answer would silently
+    # interpret-mode TPU runs or try to compile on CPU.
+    return jax.default_backend() != "tpu"
 
 
 def ws_reduce(F: jnp.ndarray, W: jnp.ndarray,
@@ -19,6 +25,6 @@ def ws_reduce(F: jnp.ndarray, W: jnp.ndarray,
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Weighted argmin over (m, B, k) banks for (nw, k) weight rows."""
     if interpret is None:
-        interpret = not _ON_TPU
+        interpret = _default_interpret()
     return ws_reduce_pallas(jnp.asarray(F), jnp.asarray(W),
                             interpret=interpret)

@@ -42,7 +42,26 @@ from ..core.moo.hmooc import EffectiveSet, HMOOCConfig
 from ..queryengine.plan import Query
 
 __all__ = ["EffectiveSetCache", "CandidatePoolCache", "query_fingerprint",
-           "template_key"]
+           "template_key", "model_fingerprint"]
+
+
+def model_fingerprint(model) -> Optional[object]:
+    """Stable cache identity for an objective model.
+
+    Prefers the model's content fingerprint (weights + config digest) so
+    cache keys survive the model object being reloaded, and — critically —
+    so a *different* model landing at a recycled ``id()`` can never satisfy
+    a key minted under its predecessor.  Models without a ``fingerprint``
+    method (test doubles, duck-typed oracles) fall back to ``id``; the
+    caches pin those objects for the life of their entries so the id stays
+    unique.
+    """
+    if model is None:
+        return None
+    fp = getattr(model, "fingerprint", None)
+    if callable(fp):
+        return fp()
+    return id(model)
 
 
 def query_fingerprint(query: Query) -> int:
@@ -62,16 +81,16 @@ def template_key(query: Query, cfg: HMOOCConfig, model, cost=None) -> Tuple:
     # The banks depend on everything stage_eval reads: query statistics
     # (fingerprinted separately), the objective model, and the cost model.
     return (query.benchmark, query.template, cfg, cost,
-            id(model) if model is not None else None)
+            model_fingerprint(model))
 
 
 @dataclasses.dataclass
 class _Entry:
     eset: EffectiveSet
     fingerprint: int
-    # Strong reference to the model the banks were computed under: the key
-    # uses id(model), which CPython may reuse after a model is collected —
-    # pinning the model keeps live entries' ids unique.
+    # Strong reference kept only for models keyed by the id() fallback,
+    # which CPython may reuse after a model is collected — pinning keeps
+    # live entries' ids unique.  Content-fingerprinted models need no pin.
     model: object = None
 
 
@@ -135,9 +154,12 @@ class EffectiveSetCache:
     def store(self, query: Query, cfg: HMOOCConfig, eset: EffectiveSet,
               model=None, cost=None) -> None:
         key = template_key(query, cfg, model, cost)
+        pin = model if (model is not None
+                        and not callable(getattr(model, "fingerprint", None))
+                        ) else None
         self._entries[key] = _Entry(eset=eset,
                                     fingerprint=query_fingerprint(query),
-                                    model=model)
+                                    model=pin)
         self._entries.move_to_end(key)
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)

@@ -162,6 +162,11 @@ class ServerStats:
     # EWMAs — the reserve regression test replays these.
     flush_windows: List[Tuple[float, int]] = dataclasses.field(
         default_factory=list)
+    # Per-flush (tune_batch wall time, batch size): the compile-time solve
+    # slice of each flush window, excluding AQE admission — what the
+    # jitted-solve benchmarks report p99 solve latency from.
+    tune_windows: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def qps(self) -> float:
@@ -264,6 +269,7 @@ class OptimizerServer:
         n_shed = 0
         n_degraded = 0
         flush_windows: List[Tuple[float, int]] = []
+        tune_windows: List[Tuple[float, int]] = []
         flushes_since_round = 0
         rounds0 = self.session.rounds_total
         slots0 = {st.name: st.slots_granted for st in sched.states()}
@@ -327,6 +333,8 @@ class OptimizerServer:
                     [s.request.query for s in batch], batch_w,
                     tenants=[s.tenant for s in batch],
                     degraded=[a.degrade for a in admits])
+                tune_windows.append((self.tuning.last_batch.wall_time,
+                                     len(batch)))
                 joined_running = self.session.n_active > 0
                 for s, ct, w in zip(batch, cts, batch_w):
                     s.ct = ct
@@ -387,7 +395,8 @@ class OptimizerServer:
             tenant_slots={st.name: st.slots_granted - slots0.get(st.name, 0)
                           for st in sched.states()
                           if st.slots_granted - slots0.get(st.name, 0)},
-            flush_windows=flush_windows)
+            flush_windows=flush_windows,
+            tune_windows=tune_windows)
         return out
 
     # -- reporting -----------------------------------------------------------

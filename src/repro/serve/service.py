@@ -26,13 +26,15 @@ from typing import List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..core.models.perf_model import PerfModel
-from ..core.moo.hmooc import HMOOCConfig
+from ..core.moo.hmooc import HMOOCConfig, HmoocPlan
 from ..core.tuning.compile_time import (CompileTimeResult,
                                         compile_time_optimize,
-                                        default_theta_result)
+                                        default_theta_result, finish_result)
+from ..core.tuning.objectives import StageObjectives, fused_stage_eval
 from ..queryengine.plan import Query
 from ..queryengine.simulator import CostModel, DEFAULT_COST
-from .cache import EffectiveSetCache, query_fingerprint
+from .cache import (EffectiveSetCache, model_fingerprint, query_fingerprint,
+                    template_key)
 
 __all__ = ["TuningService", "tune_batch", "ResponseCache"]
 
@@ -65,6 +67,13 @@ class ResponseCache:
     tenant id is part of the key, so one tenant's weighted picks are never
     served to another — even before the preference weights (also in the
     key) would force a miss.
+
+    The model's *content fingerprint* (not its live object identity) is the
+    last key element: a reloaded model with identical weights keeps its
+    entries valid, while a retrained model can never be served a
+    predecessor's picks — even if the old object is collected and its id
+    recycled.  :meth:`clear_model` drops every entry minted under a given
+    fingerprint (the retire-a-model path).
     """
 
     def __init__(self, max_entries: int = 4096):
@@ -73,6 +82,7 @@ class ResponseCache:
         self._d: "OrderedDict[tuple, CompileTimeResult]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.model_evictions = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -92,9 +102,32 @@ class ResponseCache:
         while len(self._d) > self.max_entries:
             self._d.popitem(last=False)
 
+    def clear_model(self, model_fp) -> int:
+        """Evict every entry keyed under model fingerprint ``model_fp``."""
+        victims = [k for k in self._d if k and k[-1] == model_fp]
+        for k in victims:
+            del self._d[k]
+        self.model_evictions += len(victims)
+        return len(victims)
+
     def stats(self) -> dict:
         return {"entries": len(self._d), "hits": self.hits,
-                "misses": self.misses}
+                "misses": self.misses,
+                "model_evictions": self.model_evictions}
+
+
+@dataclasses.dataclass
+class _CheapEntry:
+    """Degraded-path response-cache entry: the result plus how it was made.
+
+    The kind travels with the entry because a later hit cannot re-derive
+    it: bank availability may have changed between the store and the hit
+    (e.g. the effective-set cache evicted the template), so re-probing at
+    hit time would relabel a cached cheap solve as a default — corrupting
+    the degraded-path accounting the overload controller steers by.
+    """
+    result: CompileTimeResult
+    kind: str                     # "cheap" | "default"
 
 
 class TuningService:
@@ -110,6 +143,7 @@ class TuningService:
         reuse_banks_across_variants: bool = False,
         dedupe: bool = True,
         response_cache: Optional[ResponseCache] = None,
+        jit_solve: Optional[bool] = None,
     ):
         self.model = model
         self.cfg = cfg
@@ -121,8 +155,25 @@ class TuningService:
             self._results: Optional[ResponseCache] = response_cache
         else:
             self._results = ResponseCache() if dedupe else None
+        # None = batched jitted solve whenever a model backs the service
+        # (the oracle backend keeps the sequential per-query loop — its
+        # evaluator is already one vectorized simulator call per stage).
+        # False forces the legacy sequential path for A/B comparison.
+        self.jit_solve = jit_solve
         self.last_batch = BatchStats()
         self.totals = BatchStats()     # cumulative over the service's life
+
+    @property
+    def model(self) -> Optional[PerfModel]:
+        return self._model
+
+    @model.setter
+    def model(self, m: Optional[PerfModel]) -> None:
+        # Response-cache keys carry the fingerprint of the model that
+        # produced them, so swapping in a retrained model invalidates old
+        # entries by key mismatch alone.
+        self._model = m
+        self._model_fp = model_fingerprint(m)
 
     def tune_batch(
         self,
@@ -158,17 +209,29 @@ class TuningService:
                 f"got {len(degraded)} degrade flags for {len(queries)} "
                 "queries")
         results: List[Optional[CompileTimeResult]] = [None] * len(queries)
+        use_batched = (self._model is not None
+                       and (self.jit_solve is None or self.jit_solve))
         n_solved = n_cheap = n_default = 0
+        run: List[int] = []
+
+        def flush_run() -> None:
+            nonlocal n_solved
+            if run:
+                n_solved += self._solve_run(queries, per_q_weights, tenants,
+                                            run, results)
+                run.clear()
+
         for qi, (q, w) in enumerate(zip(queries, per_q_weights)):
-            # qid + statistics fingerprint: the 32-bit crc alone could
-            # collide across distinct queries in a long-lived service.
-            # cfg/cost/model complete the inputs the solver reads, so one
-            # ResponseCache can be shared across differently-configured
-            # services (the model object in the key also pins it live,
-            # keeping identity-hashed entries unambiguous).
-            key = (tenants[qi] if tenants is not None else None,
-                   q.qid, query_fingerprint(q), w, self.cfg, self.cost,
-                   self.model)
+            if use_batched and not (degraded is not None and degraded[qi]):
+                # Batched across the run of non-degraded neighbors; any
+                # degraded query below acts as a barrier so cache traffic
+                # keeps the sequential order (and therefore stats).
+                run.append(qi)
+                continue
+            flush_run()
+            key = self._response_key(q, w,
+                                     tenants[qi] if tenants is not None
+                                     else None)
             if self._results is not None:
                 hit = self._results.get(key)
                 if hit is not None:
@@ -182,11 +245,12 @@ class TuningService:
                     n_default += 1
                 continue
             results[qi] = compile_time_optimize(
-                q, model=self.model, weights=w, cfg=self.cfg,
+                q, model=self._model, weights=w, cfg=self.cfg,
                 cost=self.cost, cache=self.cache)
             n_solved += 1
             if self._results is not None:
                 self._results.put(key, results[qi])
+        flush_run()
         dt = time.perf_counter() - t0
         self.last_batch = BatchStats(
             n_queries=len(queries), n_solved=n_solved,
@@ -198,6 +262,154 @@ class TuningService:
                                                            f.name))
         return results  # type: ignore[return-value]
 
+    def _response_key(self, q: Query, w: Weights, tenant) -> tuple:
+        # qid + statistics fingerprint: the 32-bit crc alone could collide
+        # across distinct queries in a long-lived service.  cfg/cost/model
+        # fingerprint complete the inputs the solver reads, so one
+        # ResponseCache can be shared across differently-configured
+        # services and survives model reloads (see ResponseCache).
+        return (tenant, q.qid, query_fingerprint(q), w, self.cfg, self.cost,
+                self._model_fp)
+
+    def _solve_run(self, queries: Sequence[Query],
+                   per_q_weights: Sequence[Weights],
+                   tenants: Optional[Sequence[Optional[str]]],
+                   idxs: Sequence[int],
+                   results: List[Optional[CompileTimeResult]]) -> int:
+        """Jitted micro-batch solve of one run of non-degraded queries.
+
+        Semantically a transcript of the sequential loop: every
+        response-cache get/put and effective-set lookup/store happens with
+        the same keys and — per cache key — in the same order, so hit/miss
+        statistics and stored artifacts match the legacy path exactly, and
+        each result is bit-identical to its ``compile_time_optimize``
+        counterpart.  What changes is the dispatch shape: all queries'
+        stage evaluations per solver phase are fused into one bucket-padded
+        model call (:func:`fused_stage_eval`), and the HMOOC solves advance
+        in lockstep as externally-driven :class:`HmoocPlan` state machines.
+        Returns the number of actual solves (post-dedup).
+        """
+        model = self._model
+        # -- response planning: dedup within and across batches ------------
+        keys: dict = {}
+        pending: dict = {}            # key -> first qi solving it this run
+        deferred_gets: List[Tuple[int, tuple]] = []
+        solved: List[int] = []
+        for qi in idxs:
+            key = self._response_key(
+                queries[qi], per_q_weights[qi],
+                tenants[qi] if tenants is not None else None)
+            keys[qi] = key
+            if self._results is not None:
+                if key in pending:
+                    # An identical request is already solving in this run;
+                    # resolve the get after its put so the dedup registers
+                    # as a response-cache hit, like the sequential order.
+                    deferred_gets.append((qi, key))
+                    continue
+                hit = self._results.get(key)
+                if hit is not None:
+                    results[qi] = hit
+                    continue
+                pending[key] = qi
+            solved.append(qi)
+        if solved:
+            # -- embedding prefetch: one GTN dispatch for the whole run ----
+            pairs = []
+            for qi in solved:
+                pairs.extend((queries[qi], i)
+                             for i in range(queries[qi].n_subqs))
+            model.embed_many(pairs)
+            objs = {qi: StageObjectives(queries[qi], model=model,
+                                        cost=self.cost) for qi in solved}
+            # -- effective-set planning ------------------------------------
+            t0s: dict = {}
+            plans: dict = {}
+            deferred_lookup: set = set()
+            pending_eset: dict = {}   # template key -> (owner qi, owner fp)
+            waiting: List[Tuple[int, int]] = []   # (qi, owner qi)
+            for qi in solved:
+                q, obj = queries[qi], objs[qi]
+                t0s[qi] = time.perf_counter()
+                tk = template_key(q, self.cfg, model, self.cost)
+                fp = query_fingerprint(q)
+                if tk in pending_eset:
+                    # The template's banks are being (re)built by an
+                    # earlier query of this run; the cache lookup is
+                    # deferred past the owner's store so stats match the
+                    # sequential transcript.
+                    owner_qi, owner_fp = pending_eset[tk]
+                    deferred_lookup.add(qi)
+                    if (fp == owner_fp
+                            or self.cache.reuse_banks_across_variants):
+                        waiting.append((qi, owner_qi))
+                        continue
+                    # Different variant, no cross-variant reuse: fresh
+                    # banks over the owner's (query-independent)
+                    # candidates; this query's store supersedes the
+                    # owner's, so it becomes the template's new owner.
+                    plans[qi] = HmoocPlan(
+                        q.n_subqs, obj.d_c, obj.d_ps, self.cfg,
+                        snap_c=obj.snap_c, snap_ps=obj.snap_ps,
+                        effective_set=plans[owner_qi].eset.without_banks())
+                    pending_eset[tk] = (qi, fp)
+                    continue
+                eset = self.cache.lookup(q, self.cfg, model, self.cost)
+                plans[qi] = HmoocPlan(
+                    q.n_subqs, obj.d_c, obj.d_ps, self.cfg,
+                    snap_c=obj.snap_c, snap_ps=obj.snap_ps,
+                    effective_set=eset)
+                if not plans[qi].reused_banks:
+                    pending_eset[tk] = (qi, fp)
+            # -- lockstep rounds: one fused model call per solver phase ----
+            while True:
+                active = [qi for qi in solved
+                          if qi in plans and not plans[qi].done]
+                if not active and not waiting:
+                    break
+                items, spans = [], []
+                for qi in active:
+                    reqs = plans[qi].requests()
+                    items.extend((objs[qi], i, Tc, Tps)
+                                 for i, Tc, Tps in reqs)
+                    spans.append((qi, len(reqs)))
+                evals = fused_stage_eval(items)
+                off = 0
+                for qi, n in spans:
+                    plans[qi].feed(evals[off:off + n])
+                    off += n
+                still = []
+                for qi, owner_qi in waiting:
+                    if plans[owner_qi].banks_ready:
+                        plans[qi] = HmoocPlan(
+                            queries[qi].n_subqs, objs[qi].d_c,
+                            objs[qi].d_ps, self.cfg,
+                            snap_c=objs[qi].snap_c,
+                            snap_ps=objs[qi].snap_ps,
+                            effective_set=plans[owner_qi].eset)
+                    else:
+                        still.append((qi, owner_qi))
+                waiting = still
+            # -- finalize in request order ---------------------------------
+            for qi in solved:
+                q, w = queries[qi], per_q_weights[qi]
+                if qi in deferred_lookup:
+                    # Stats-only replay of the lookup the sequential path
+                    # would have issued here (after the owner's store).
+                    self.cache.lookup(q, self.cfg, model, self.cost)
+                plan = plans[qi]
+                res = plan.result
+                if not plan.reused_banks and res.effective_set is not None:
+                    self.cache.store(q, self.cfg, res.effective_set, model,
+                                     self.cost)
+                ct = finish_result(q, objs[qi], res, w, t0s[qi])
+                results[qi] = ct
+                if self._results is not None:
+                    self._results.put(keys[qi], ct)
+        for qi, key in deferred_gets:
+            results[qi] = self._results.get(key)
+        return len(solved)
+
     def _tune_cheap(self, q: Query, w: Weights, exact_key: tuple
                     ) -> Tuple[CompileTimeResult, str]:
         """Budget-blown solve: cached template banks or the Spark defaults.
@@ -206,31 +418,43 @@ class TuningService:
         missed the exact response cache for ``exact_key``; approximate
         results are stored under a degrade-marked variant of that key
         (exact bank reuse — matching fingerprint — is bit-identical to a
-        full solve and stored under the exact key itself).
+        full solve and stored under the exact key itself).  Degrade-marked
+        entries carry their kind (:class:`_CheapEntry`) so a hit reports
+        how the cached result was actually produced, not what this call's
+        bank probe would have done — the two diverge whenever the
+        effective-set cache evicted (or gained) the template between the
+        store and the hit.
         """
-        peeked = self.cache.peek(q, self.cfg, self.model, self.cost)
-        if peeked is not None:
-            eset, exact = peeked
-            key = exact_key if exact else ("degraded",) + exact_key
+        peeked = self.cache.peek(q, self.cfg, self._model, self.cost)
+        if peeked is not None and peeked[1]:
+            # Exact bank reuse is bit-identical to a full solve: share the
+            # exact key with the full-quality path.
             if self._results is not None:
-                hit = self._results.get(key)
+                hit = self._results.get(exact_key)
                 if hit is not None:
                     return hit, "cheap"
             res = compile_time_optimize(
-                q, model=self.model, weights=w, cfg=self.cfg,
-                cost=self.cost, effective_set=eset)
+                q, model=self._model, weights=w, cfg=self.cfg,
+                cost=self.cost, effective_set=peeked[0])
             if self._results is not None:
-                self._results.put(key, res)
+                self._results.put(exact_key, res)
             return res, "cheap"
         key = ("degraded",) + exact_key
         if self._results is not None:
             hit = self._results.get(key)
             if hit is not None:
-                return hit, "default"
-        res = default_theta_result(q, model=self.model, cost=self.cost)
+                return hit.result, hit.kind
+        if peeked is not None:
+            res = compile_time_optimize(
+                q, model=self._model, weights=w, cfg=self.cfg,
+                cost=self.cost, effective_set=peeked[0])
+            kind = "cheap"
+        else:
+            res = default_theta_result(q, model=self._model, cost=self.cost)
+            kind = "default"
         if self._results is not None:
-            self._results.put(key, res)
-        return res, "default"
+            self._results.put(key, _CheapEntry(res, kind))
+        return res, kind
 
 
 def tune_batch(
@@ -242,10 +466,11 @@ def tune_batch(
     cost: CostModel = DEFAULT_COST,
     cache: Optional[EffectiveSetCache] = None,
     dedupe: bool = True,
+    jit_solve: Optional[bool] = None,
 ) -> List[CompileTimeResult]:
     """One-shot batched solve; see :class:`TuningService` for a server."""
     svc = TuningService(model=model, cfg=cfg, cost=cost, cache=cache,
-                        dedupe=dedupe)
+                        dedupe=dedupe, jit_solve=jit_solve)
     return svc.tune_batch(queries, weights)
 
 

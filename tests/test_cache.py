@@ -67,7 +67,8 @@ def test_response_cache_lru_and_stats():
     assert len(cache) == 2
     assert cache.get("b") is None       # evicted
     assert cache.get("a") == 1 and cache.get("c") == 3
-    assert cache.stats() == {"entries": 2, "hits": 3, "misses": 1}
+    assert cache.stats() == {"entries": 2, "hits": 3, "misses": 1,
+                             "model_evictions": 0}
 
 
 def test_response_cache_shared_across_configs_is_safe():

@@ -1,0 +1,169 @@
+"""Accelerator-resident jitted model-backed solve: parity + compile bounds.
+
+The batched serving path (``TuningService(jit_solve=None/True)``) fuses
+every (query, subQ, candidate) stage evaluation of a micro-batch into
+bucket-padded ``PerfModel.predict_rows`` dispatches and drives the HMOOC
+solves in lockstep.  These tests pin its two contracts:
+
+* **bit identity** — per-query results, cache statistics and stored
+  artifacts are exactly those of the legacy sequential path
+  (``jit_solve=False``), including dedup, template reuse, per-tenant
+  keying and degraded-query interleaving;
+* **bounded recompilation** — across arbitrarily varying batch sizes the
+  jitted functions compile at most one signature per shape bucket.
+"""
+import numpy as np
+import pytest
+
+from repro.core.moo.hmooc import HMOOCConfig
+from repro.core.tuning.compile_time import default_theta_result
+from repro.core.tuning.objectives import StageObjectives, fused_stage_eval
+from repro.queryengine.workloads import make_benchmark, serving_stream
+from repro.serve import TuningService
+
+CFG = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48, n_c_enrich=12,
+                  max_bank=12, seed=3)
+
+
+def _assert_ct_equal(a, b):
+    np.testing.assert_array_equal(a.front, b.front)
+    assert a.choice == b.choice
+    np.testing.assert_array_equal(a.theta_c, b.theta_c)
+    np.testing.assert_array_equal(a.theta_p_sub, b.theta_p_sub)
+    np.testing.assert_array_equal(a.theta_s_sub, b.theta_s_sub)
+    np.testing.assert_array_equal(a.theta_p0, b.theta_p0)
+    np.testing.assert_array_equal(a.theta_s0, b.theta_s0)
+
+
+def _stats_tuple(svc):
+    s = svc.last_batch
+    return (s.n_queries, s.n_solved, s.n_deduped, s.n_cheap,
+            s.n_default_theta)
+
+
+def test_jit_solve_bitmatches_legacy(smoke_perf_models):
+    """Repeated-template stream: per-query results, response dedup and
+    effective-set reuse all match the sequential path bit for bit."""
+    model = smoke_perf_models["subq"]
+    stream = serving_stream("tpch", 10, seed=5)   # repeats templates
+    legacy = TuningService(model=model, cfg=CFG, jit_solve=False)
+    jit = TuningService(model=model, cfg=CFG)
+    ra = legacy.tune_batch(stream)
+    rb = jit.tune_batch(stream)
+    for a, b in zip(ra, rb):
+        _assert_ct_equal(a, b)
+    assert _stats_tuple(legacy) == _stats_tuple(jit)
+    assert legacy.cache.stats() == jit.cache.stats()
+    assert legacy._results.stats()["hits"] == jit._results.stats()["hits"]
+    # Second identical batch: both fully deduped.
+    ra2 = jit.tune_batch(stream)
+    assert jit.last_batch.n_deduped == len(stream)
+    for a, b in zip(rb, ra2):
+        _assert_ct_equal(a, b)
+
+
+def test_jit_solve_per_tenant_golden_determinism(smoke_perf_models):
+    """Per-tenant keys and per-query weights survive the batched path
+    unchanged: each tenant gets the pick its own weights select, identical
+    to a sequential solve of the same request."""
+    model = smoke_perf_models["subq"]
+    qs = make_benchmark("tpch")
+    queries = [qs[1], qs[1], qs[5]]
+    tenants = ["a", "b", "a"]
+    weights = [(1.0, 0.0), (0.0, 1.0), (0.5, 0.5)]
+    legacy = TuningService(model=model, cfg=CFG, jit_solve=False)
+    jit = TuningService(model=model, cfg=CFG)
+    ra = legacy.tune_batch(queries, weights, tenants=tenants)
+    rb = jit.tune_batch(queries, weights, tenants=tenants)
+    for a, b in zip(ra, rb):
+        _assert_ct_equal(a, b)
+    assert _stats_tuple(legacy) == _stats_tuple(jit)
+    # Same front across weights, picks chosen per request's own weights.
+    np.testing.assert_array_equal(rb[0].front, rb[1].front)
+    assert rb[0].chosen_objectives[0] <= rb[1].chosen_objectives[0]
+
+
+def test_jit_solve_degraded_interleave_matches_legacy(smoke_perf_models):
+    """Degraded queries act as barriers inside a batch; stats and results
+    still match the sequential transcript exactly."""
+    model = smoke_perf_models["subq"]
+    stream = serving_stream("tpch", 8, seed=11)
+    degraded = [False, True, False, False, True, False, False, False]
+    legacy = TuningService(model=model, cfg=CFG, jit_solve=False)
+    jit = TuningService(model=model, cfg=CFG)
+    ra = legacy.tune_batch(stream, degraded=degraded)
+    rb = jit.tune_batch(stream, degraded=degraded)
+    for a, b in zip(ra, rb):
+        _assert_ct_equal(a, b)
+    assert _stats_tuple(legacy) == _stats_tuple(jit)
+    assert legacy.cache.stats() == jit.cache.stats()
+
+
+def test_jit_solve_recompilation_bound():
+    """Across varying micro-batch sizes the jitted model functions compile
+    at most one signature per shape bucket."""
+    from test_serve import _tiny_perf_model
+    model = _tiny_perf_model(seed=2)
+    svc = TuningService(model=model, cfg=CFG, dedupe=False)
+    stream = serving_stream("tpch", 12, seed=3)
+    for size in (1, 3, 2, 5, 1):
+        batch, stream = stream[:size], stream[size:]
+        svc.tune_batch(batch)
+    stats = model.compile_stats()
+    assert stats["head_compiles"] == len(stats["head_buckets"])
+    assert stats["embed_compiles"] == len(stats["embed_buckets"])
+
+
+def test_default_theta_result_batched_equivalence(smoke_perf_models):
+    """Satellite: the vectorized degraded fallback equals the historical
+    per-subQ loop (model-backed).  One batched regressor dispatch replaces
+    m batch-of-one calls; XLA's matvec-vs-matmul codegen may differ in the
+    final float32 ulp, so equivalence is to float32 precision — the
+    reduction order itself is unchanged (left-to-right over subQs)."""
+    model = smoke_perf_models["subq"]
+    q = make_benchmark("tpch")[2]
+    res = default_theta_result(q, model=model)
+    obj = StageObjectives(q, model=model)
+    tc_u = obj.cs.default_unit()[None, :]
+    tps_u = np.tile(np.concatenate([obj.ps.default_unit(),
+                                    obj.ss.default_unit()]), (obj.m, 1))
+    front = np.zeros((1, 2), np.float64)
+    for i in range(obj.m):
+        front[0] += obj.stage_eval(i, tc_u, tps_u[i:i + 1])[0]
+    np.testing.assert_allclose(res.front, front, rtol=2e-6)
+    assert res.n_evals == q.n_subqs
+    # Determinism: repeated batched evaluations are bit-identical.
+    res2 = default_theta_result(q, model=model)
+    np.testing.assert_array_equal(res.front, res2.front)
+
+
+def test_fused_stage_eval_matches_per_request(smoke_perf_models):
+    """fused_stage_eval row slices equal the per-request stage_eval calls
+    they replace, across queries and subQs in one dispatch."""
+    model = smoke_perf_models["subq"]
+    qs = make_benchmark("tpch")
+    rng = np.random.default_rng(0)
+    items, refs = [], []
+    for q in (qs[1], qs[5]):
+        obj = StageObjectives(q, model=model)
+        for i in range(min(2, obj.m)):
+            n = int(rng.integers(3, 9))
+            Tc = rng.random((n, obj.d_c))
+            Tps = rng.random((n, obj.d_ps))
+            items.append((obj, i, Tc, Tps))
+            refs.append(obj.stage_eval(i, Tc, Tps))
+    got = fused_stage_eval(items)
+    assert len(got) == len(refs)
+    for g, r in zip(got, refs):
+        np.testing.assert_array_equal(g, r)
+
+
+def test_fused_stage_eval_oracle_fallback():
+    """Oracle backend (model=None) falls back to per-request evaluation."""
+    q = make_benchmark("tpch")[1]
+    obj = StageObjectives(q)
+    Tc = np.full((4, obj.d_c), 0.5)
+    Tps = np.full((4, obj.d_ps), 0.5)
+    got = fused_stage_eval([(obj, 0, Tc, Tps), (obj, 1, Tc, Tps)])
+    np.testing.assert_array_equal(got[0], obj.stage_eval(0, Tc, Tps))
+    np.testing.assert_array_equal(got[1], obj.stage_eval(1, Tc, Tps))

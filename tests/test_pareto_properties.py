@@ -124,3 +124,45 @@ def test_dominated_points_never_survive(seed, n, k, force_kernel):
         np.testing.assert_array_equal(mask[:n], pareto_mask_fast(F))
     finally:
         pareto._KERNEL_MIN_N = None
+
+
+# ---------------------------------------------------------------------------
+# f32-tie routing: float64-distinct values that collide in float32 must not
+# change the mask depending on which backend the batch routed to.
+# ---------------------------------------------------------------------------
+
+def test_f32_tie_hazard_detector():
+    clean = np.array([[1.0, 2.0], [3.0, 4.0], [np.inf, np.inf]])
+    assert not pareto._f32_tie_hazard(clean)
+    # 1.0 and 1.0 + 1e-12 are distinct doubles, identical floats.
+    hazard = np.array([[1.0, 2.0], [1.0 + 1e-12, 4.0]])
+    assert pareto._f32_tie_hazard(hazard)
+    # Infinities never count as collisions.
+    assert not pareto._f32_tie_hazard(np.array([[np.inf, 1.0],
+                                                [np.inf, 2.0]]))
+
+
+def test_mask_fast_f32_tie_straddle_routes_to_numpy():
+    """Engineered straddle: point b is strictly dominated in float64 but
+    ties its dominator after the kernel's float32 cast.  Tie-tolerant
+    routing must keep the float64 verdict on the kernel regime too."""
+    pareto._KERNEL_MIN_N = 0          # kernel regime for every size
+    F = np.array([[1.0, 2.0],
+                  [1.0 + 1e-12, 2.0],         # dominated by row 0 (f64 only)
+                  [0.5, 3.0]])
+    got = pareto_mask_fast(F)
+    np.testing.assert_array_equal(got, pareto_mask_np(F))
+    np.testing.assert_array_equal(got, [True, False, True])
+
+
+def test_mask_fast_f32_tie_straddle_large_n():
+    """Same straddle buried in a large batch that would otherwise route to
+    the kernel on its own size."""
+    pareto._KERNEL_MIN_N = 0
+    rng = np.random.default_rng(7)
+    F = (rng.random((600, 2)) * 8 + 4).astype(np.float32).astype(np.float64)
+    F[17] = (2.0, 2.0)
+    F[401] = (2.0 + 4e-13, 2.0)       # f64-dominated, f32-tied with row 17
+    got = pareto_mask_fast(F)
+    np.testing.assert_array_equal(got, pareto_mask_np(F))
+    assert got[17] and not got[401]

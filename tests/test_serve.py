@@ -214,3 +214,86 @@ def test_hmooc_solve_kernel_path_front_matches(force_kernels, monkeypatch):
     ref = hmooc_solve(stage_eval, m=3, d_c=2, d_ps=2, cfg=cfg)
     np.testing.assert_allclose(np.sort(kernel.front, 0),
                                np.sort(ref.front, 0), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Degraded-path accounting: the cached kind must travel with the entry
+# ---------------------------------------------------------------------------
+
+def test_degraded_kind_survives_bank_cache_eviction():
+    """A cached cheap (bank-reuse) degraded result must keep reporting as
+    cheap after the effective-set cache evicts the template — re-probing
+    bank availability at hit time would relabel it as a default."""
+    from repro.queryengine.workloads import make_query
+    q_v1 = make_query("tpch", 3, variant=1)
+    q_v2 = make_query("tpch", 3, variant=2)
+    svc = TuningService(cfg=CFG)
+    svc.tune_batch([q_v1])                       # seeds the template's banks
+    res = svc.tune_batch([q_v2], degraded=[True])
+    assert svc.last_batch.n_cheap == 1           # approximate bank reuse
+    assert svc.last_batch.n_default_theta == 0
+    svc.cache._entries.clear()                   # evict every template
+    res2 = svc.tune_batch([q_v2], degraded=[True])
+    assert svc.last_batch.n_cheap == 1           # still labeled cheap
+    assert svc.last_batch.n_default_theta == 0
+    np.testing.assert_array_equal(res[0].front, res2[0].front)
+
+
+def test_degraded_kind_default_not_relabeled_when_banks_appear():
+    """The reverse staleness: a cached default-θ degraded result stays
+    labeled default even if template banks have shown up since."""
+    from repro.queryengine.workloads import make_query
+    q_v1 = make_query("tpch", 5, variant=1)
+    q_v2 = make_query("tpch", 5, variant=2)
+    svc = TuningService(cfg=CFG)
+    res = svc.tune_batch([q_v2], degraded=[True])
+    assert svc.last_batch.n_default_theta == 1   # no banks anywhere yet
+    svc.tune_batch([q_v1])                       # banks appear (variant 1)
+    res2 = svc.tune_batch([q_v2], degraded=[True])
+    assert svc.last_batch.n_default_theta == 1   # cached default, says so
+    assert svc.last_batch.n_cheap == 0
+    np.testing.assert_array_equal(res[0].front, res2[0].front)
+
+
+# ---------------------------------------------------------------------------
+# Response-cache model identity: fingerprint keys, swap safety, eviction
+# ---------------------------------------------------------------------------
+
+def _tiny_perf_model(seed):
+    from repro.core.models.gtn import GTNConfig
+    from repro.core.models.perf_model import ModelConfig, PerfModel
+    cfg = ModelConfig("subq", 19, gtn=GTNConfig(d_model=16, n_heads=2,
+                                                n_layers=1, d_ff=32),
+                      hidden=(16,))
+    return PerfModel(cfg, seed=seed)
+
+
+def test_response_cache_model_swap_and_clear(queries):
+    from repro.core.models.perf_model import PerfModel
+    from repro.serve.cache import model_fingerprint
+    m1 = _tiny_perf_model(seed=0)
+    m2 = _tiny_perf_model(seed=1)
+    assert model_fingerprint(m1) != model_fingerprint(m2)
+    q = queries[0]
+    svc = TuningService(model=m1, cfg=CFG)
+    r1 = svc.tune_batch([q])
+    assert svc.last_batch.n_solved == 1
+    # Retrained model swapped in: the old entry must never be served.
+    svc.model = m2
+    svc.tune_batch([q])
+    assert svc.last_batch.n_solved == 1          # fresh solve, no stale hit
+    # A *reloaded* copy of m1 (same weights, new object, new id) keeps its
+    # entries valid: fingerprint identity, not object identity.
+    m1b = PerfModel(m1.cfg, params=m1.params, target_stats=m1.target_stats)
+    assert m1b is not m1
+    assert model_fingerprint(m1b) == model_fingerprint(m1)
+    svc.model = m1b
+    r1b = svc.tune_batch([q])
+    assert svc.last_batch.n_deduped == 1         # served m1's cached result
+    np.testing.assert_array_equal(r1[0].front, r1b[0].front)
+    # Retiring a model drops exactly its entries.
+    n = svc._results.clear_model(model_fingerprint(m1))
+    assert n == 1
+    assert svc._results.stats()["model_evictions"] == 1
+    svc.tune_batch([q])
+    assert svc.last_batch.n_solved == 1          # entry gone, solved anew
