@@ -1,0 +1,23 @@
+"""``repro.analysis`` — invariant-checking static analysis for the repo.
+
+Four checkers over the source tree, each pinning a bug class every earlier
+PR has hand-fixed at least once:
+
+* :mod:`.trace_hazards` (``TH*``) — traced-value branches, host syncs,
+  import/first-call-frozen backend & env routing, unbucketed dispatch.
+* :mod:`.cache_keys` (``CK*``) — serving-cache key completeness against
+  the context dimensions the cached computations read.
+* :mod:`.determinism` (``DT*``) — wall-clock, unseeded RNG and
+  set-iteration-order leaks in transcript-order paths.
+* :mod:`.kernel_parity` (``KP*``) — every kernel package ships a ref,
+  a registered parity test, and tie-tolerant f32 routing.
+
+Run ``python -m repro.analysis [--strict] [paths...]`` (default ``src``);
+suppress an intentional finding inline with
+``# repro: allow[RULE] written justification``.
+"""
+from .core import (Finding, RunResult, SourceFile, RULES, render_report,
+                   run_files, run_paths)
+
+__all__ = ["Finding", "RunResult", "SourceFile", "RULES", "render_report",
+           "run_files", "run_paths"]

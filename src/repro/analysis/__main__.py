@@ -1,0 +1,35 @@
+"""CLI: ``python -m repro.analysis [--strict] [paths...]``.
+
+Exit status 0 when every finding is suppressed (with a written
+justification under ``--strict``), 1 otherwise.  Prints each finding as
+``path:line: RULE message`` plus a per-rule summary table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .core import render_report, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Invariant-checking static analysis "
+                    "(trace hazards, cache keys, determinism, kernel "
+                    "parity).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to scan (default: src)")
+    ap.add_argument("--strict", action="store_true",
+                    help="suppressions must carry a written justification")
+    ap.add_argument("--tests", default=None,
+                    help="parity-test file for the kernel registry "
+                    "(default: auto-discover tests/test_kernels.py)")
+    args = ap.parse_args(argv)
+    result = run_paths(args.paths, strict=args.strict, tests_dir=args.tests)
+    print(render_report(result))
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

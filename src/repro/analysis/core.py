@@ -1,0 +1,194 @@
+"""Shared walker / reporting core for the invariant checkers.
+
+The suite is a set of *invariant pins*, not a general linter: each checker
+encodes one determinism or correctness contract the serving stack depends
+on (see the checker modules' docstrings), and the golden fixture tests in
+``tests/test_analysis.py`` pin the exact findings each rule produces.
+
+Findings carry ``path:line`` and a rule id.  A finding is silenced with an
+inline suppression on the flagged line, or on a comment-only line directly
+above it::
+
+    _FLAGS = os.environ.get("X")  # repro: allow[TH003] read before jax init
+
+In ``--strict`` mode a suppression without a written justification is
+itself a finding (rule ``SUP001``) — every silenced invariant must say why.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from collections import Counter
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+__all__ = ["Finding", "SourceFile", "Suppression", "run_paths", "run_files",
+           "render_report", "iter_python_files", "RULES", "register_rules"]
+
+# rule id -> one-line description; checker modules register theirs on import.
+RULES: Dict[str, str] = {
+    "SUP001": "inline suppression carries no written justification",
+}
+
+
+def register_rules(rules: Dict[str, str]) -> None:
+    RULES.update(rules)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str          # as given to the runner (repo-relative in CI)
+    line: int          # 1-indexed
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int          # line the comment sits on
+    rules: tuple       # rule ids listed in allow[...]
+    reason: str        # justification text after the bracket
+    covers: int        # line the suppression applies to
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*allow\[([A-Za-z0-9_,\s]+)\]\s*(.*?)\s*$")
+
+
+class SourceFile:
+    """One parsed python file: text, AST, and its inline suppressions."""
+
+    def __init__(self, path, text: Optional[str] = None):
+        self.path = str(path)
+        if text is None:
+            text = Path(path).read_text()
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=self.path)
+        self.suppressions: List[Suppression] = []
+        for i, raw in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(raw)
+            if not m:
+                continue
+            rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+            # A comment-only line covers the next line; a trailing comment
+            # covers its own line.
+            covers = i + 1 if raw.lstrip().startswith("#") else i
+            self.suppressions.append(
+                Suppression(line=i, rules=rules, reason=m.group(2),
+                            covers=covers))
+
+    def suppression_for(self, finding: Finding) -> Optional[Suppression]:
+        for s in self.suppressions:
+            if s.covers == finding.line and finding.rule in s.rules:
+                return s
+        return None
+
+
+# A checker is a callable SourceFile -> List[Finding].  Project-scoped
+# checkers (kernel parity) are run separately by the CLI over the tree.
+Checker = Callable[[SourceFile], List[Finding]]
+
+
+def iter_python_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(f for f in p.rglob("*.py")
+                              if "__pycache__" not in f.parts))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+@dataclasses.dataclass
+class RunResult:
+    findings: List[Finding]                 # unsuppressed (actionable)
+    suppressed: List[Finding]               # silenced by an inline allow
+    parse_errors: List[Finding]             # unreadable / unparsable files
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.parse_errors
+
+    def counts(self) -> Dict[str, Dict[str, int]]:
+        live = Counter(f.rule for f in self.findings + self.parse_errors)
+        supp = Counter(f.rule for f in self.suppressed)
+        return {r: {"findings": live.get(r, 0), "suppressed": supp.get(r, 0)}
+                for r in sorted(set(live) | set(supp))}
+
+
+def run_files(files: Iterable, checkers: Sequence[Checker],
+              *, strict: bool = False) -> RunResult:
+    """Run file-scoped checkers; split findings by suppression status."""
+    live: List[Finding] = []
+    suppressed: List[Finding] = []
+    errors: List[Finding] = []
+    for f in files:
+        if isinstance(f, SourceFile):
+            src = f
+        else:
+            try:
+                src = SourceFile(f)
+            except (SyntaxError, UnicodeDecodeError, OSError) as e:
+                errors.append(Finding(str(f), getattr(e, "lineno", 1) or 1,
+                                      "PARSE", f"unparsable file: {e}"))
+                continue
+        file_findings: List[Finding] = []
+        for checker in checkers:
+            file_findings.extend(checker(src))
+        for fd in file_findings:
+            s = src.suppression_for(fd)
+            if s is None:
+                live.append(fd)
+            else:
+                suppressed.append(fd)
+                if strict and not s.reason:
+                    live.append(Finding(
+                        src.path, s.line, "SUP001",
+                        f"suppression of {fd.rule} has no justification"))
+    live.sort(key=lambda f: (f.path, f.line, f.rule))
+    return RunResult(findings=live, suppressed=suppressed,
+                     parse_errors=errors)
+
+
+def run_paths(paths: Sequence[str], *, strict: bool = False,
+              tests_dir: Optional[str] = None) -> RunResult:
+    """Full suite over ``paths``: file checkers + the kernel-parity tree
+    checker (which needs the kernels package and the parity-test file)."""
+    from . import cache_keys, determinism, kernel_parity, trace_hazards
+
+    files = iter_python_files(paths)
+    result = run_files(
+        files,
+        [trace_hazards.check, cache_keys.check, determinism.check,
+         kernel_parity.check_file],
+        strict=strict)
+    result.findings.extend(
+        kernel_parity.check_tree(paths, tests_dir=tests_dir))
+    result.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return result
+
+
+def render_report(result: RunResult) -> str:
+    """Findings list + the per-rule summary table printed in CI logs."""
+    out: List[str] = []
+    for f in result.parse_errors + result.findings:
+        out.append(f.format())
+    counts = result.counts()
+    if counts:
+        out.append("")
+    width = max([len("rule")] + [len(r) for r in counts])
+    out.append(f"{'rule':<{width}}  findings  suppressed  description")
+    for rule, c in counts.items():
+        desc = RULES.get(rule, "")
+        out.append(f"{rule:<{width}}  {c['findings']:>8}  "
+                   f"{c['suppressed']:>10}  {desc}")
+    total = len(result.findings) + len(result.parse_errors)
+    out.append(f"{'total':<{width}}  {total:>8}  "
+               f"{len(result.suppressed):>10}")
+    return "\n".join(out)

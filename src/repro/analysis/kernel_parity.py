@@ -1,0 +1,206 @@
+"""Kernel parity-registry checker.
+
+Every kernel package under ``src/repro/kernels/`` is an alternative
+implementation of arithmetic that also exists (or must exist) as a plain
+reference — that is what makes the Pallas routing *checkable*.  This
+checker enforces the registry contract:
+
+* ``KP001`` **missing-ref** — a kernel package (a directory with an
+  ``ops.py``) ships no ``ref.py`` reference implementation.
+* ``KP002`` **unregistered-parity-test** — ``tests/test_kernels.py`` has
+  no test that exercises the package against a ``*ref*`` oracle (a test
+  function must use a symbol imported from the package *and* reference a
+  name containing ``ref``).
+* ``KP003`` **tie-blind-routing** — a routing site outside ``kernels/``
+  (recognized by the project idiom: a function-local lazy ``from
+  ...kernels.<pkg> import``) dispatches to a float32-comparing kernel
+  (``pareto_filter`` / ``ws_reduce`` / ``fused_solve``) without a
+  ``*tie_hazard*`` guard reachable from that function or a same-module
+  caller.  Without the guard, values that are distinct in float64 but
+  collide in float32 make the result depend on which side of the size
+  threshold the batch landed — the f32/f64 near-tie routing bug class.
+
+``flash_attention`` is exempt from KP003 by registry: its inputs are
+natively f32/bf16 and it has no dtype-changing numpy fallback, so routing
+cannot change the compare semantics.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set
+
+from .core import Finding, SourceFile, register_rules
+
+__all__ = ["check_file", "check_tree", "RULES", "ROUTED_F32_KERNELS"]
+
+RULES = {
+    "KP001": "kernel package ships no numpy/jnp ref.py reference",
+    "KP002": "kernel package has no registered parity test against its ref",
+    "KP003": "f32 kernel routing site without a tie-hazard guard",
+}
+register_rules(RULES)
+
+# Kernel packages whose kernel path compares in float32 while the numpy
+# fallback compares in float64 — the packages KP003 guards.
+ROUTED_F32_KERNELS = {"pareto_filter", "ws_reduce", "fused_solve"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Tree-scoped rules: KP001 / KP002
+# ---------------------------------------------------------------------------
+
+def _kernel_packages(paths: Sequence[str]) -> List[Path]:
+    pkgs: List[Path] = []
+    seen: Set[Path] = set()
+    for p in paths:
+        p = Path(p)
+        roots = [p] if p.is_dir() else [p.parent]
+        for root in roots:
+            for ops in root.rglob("ops.py"):
+                pkg = ops.parent
+                if pkg.parent.name == "kernels" and pkg not in seen:
+                    seen.add(pkg)
+                    pkgs.append(pkg)
+    return sorted(pkgs)
+
+
+def _find_tests_file(pkgs: Sequence[Path],
+                     tests_dir: Optional[str]) -> Optional[Path]:
+    if tests_dir is not None:
+        t = Path(tests_dir)
+        return t if t.is_file() else t / "test_kernels.py"
+    for pkg in pkgs:
+        # .../src/repro/kernels/<pkg> -> repo root three levels above src
+        for anc in pkg.parents:
+            cand = anc / "tests" / "test_kernels.py"
+            if cand.is_file():
+                return cand
+    cand = Path("tests/test_kernels.py")
+    return cand if cand.is_file() else None
+
+
+def _parity_tested_packages(tests_file: Path) -> Set[str]:
+    """Packages exercised against a ``*ref*`` symbol by some test fn."""
+    try:
+        tree = ast.parse(tests_file.read_text(), filename=str(tests_file))
+    except (SyntaxError, OSError):
+        return set()
+    module_imports: Dict[str, str] = {}   # imported name -> kernel pkg
+    for node in tree.body:
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and "kernels." in node.module:
+            pkg = node.module.split("kernels.")[1].split(".")[0]
+            for alias in node.names:
+                module_imports[alias.asname or alias.name] = pkg
+    tested: Set[str] = set()
+    for fn in tree.body:
+        if not isinstance(fn, ast.FunctionDef) \
+                or not fn.name.startswith("test"):
+            continue
+        local_imports = dict(module_imports)
+        used: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.ImportFrom) and node.module \
+                    and "kernels." in node.module:
+                pkg = node.module.split("kernels.")[1].split(".")[0]
+                for alias in node.names:
+                    local_imports[alias.asname or alias.name] = pkg
+            elif isinstance(node, ast.Name):
+                used.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                used.add(node.attr)
+        has_ref = any("ref" in u.lower() for u in used)
+        if not has_ref:
+            continue
+        for name, pkg in local_imports.items():
+            if name in used:
+                tested.add(pkg)
+    return tested
+
+
+def check_tree(paths: Sequence[str],
+               tests_dir: Optional[str] = None) -> List[Finding]:
+    pkgs = _kernel_packages(paths)
+    if not pkgs:
+        return []
+    findings: List[Finding] = []
+    tests_file = _find_tests_file(pkgs, tests_dir)
+    tested = _parity_tested_packages(tests_file) if tests_file else set()
+    for pkg in pkgs:
+        ops = pkg / "ops.py"
+        if not (pkg / "ref.py").is_file():
+            findings.append(Finding(
+                str(ops), 1, "KP001",
+                f"kernel package `{pkg.name}` has no ref.py reference "
+                "implementation"))
+        if pkg.name not in tested:
+            where = tests_file or "tests/test_kernels.py"
+            findings.append(Finding(
+                str(ops), 1, "KP002",
+                f"no parity test in {where} exercises "
+                f"`{pkg.name}` against a ref oracle"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# File-scoped rule: KP003
+# ---------------------------------------------------------------------------
+
+def _fn_tokens(fn: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out
+
+
+def check_file(src: SourceFile) -> List[Finding]:
+    if "kernels" in Path(src.path).parts:
+        return []                      # intra-package composition is exempt
+    fns = [n for n in ast.walk(src.tree) if isinstance(n, ast.FunctionDef)]
+    tokens = {fn.name: _fn_tokens(fn) for fn in fns}
+    # Same-module caller graph: caller -> callees (by referenced name).
+    names = set(tokens)
+    callers: Dict[str, Set[str]] = {n: set() for n in names}
+    for fn in fns:
+        for callee in tokens[fn.name] & names:
+            if callee != fn.name:
+                callers.setdefault(callee, set()).add(fn.name)
+
+    def guarded(name: str, seen: Set[str]) -> bool:
+        if name in seen:
+            return False
+        seen.add(name)
+        if any("tie_hazard" in t for t in tokens.get(name, ())):
+            return True
+        return any(guarded(c, seen) for c in callers.get(name, ()))
+
+    findings: List[Finding] = []
+    for fn in fns:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.ImportFrom) and node.module \
+                    and "kernels." in node.module:
+                pkg = node.module.split("kernels.")[1].split(".")[0]
+                if pkg in ROUTED_F32_KERNELS \
+                        and not guarded(fn.name, set()):
+                    findings.append(Finding(
+                        src.path, node.lineno, "KP003",
+                        f"`{fn.name}` routes to the f32 `{pkg}` kernel "
+                        "with no tie-hazard guard: near-tie results would "
+                        "depend on which side of the size threshold the "
+                        "batch lands"))
+    return findings

@@ -1,0 +1,333 @@
+"""Trace-hazard checker: jit/trace-time pitfalls and frozen routing state.
+
+The serving stack's 1-2 s compile-time budget depends on jitted solver code
+never falling back to host round-trips mid-trace, and on backend/env
+routing decisions staying *live* — resolved per call, not captured once at
+import (or first call) and silently stale for the rest of the process.
+
+Rules:
+
+* ``TH001`` **traced-branch** — inside a jit-compiled / vmapped / Pallas
+  kernel function, a Python ``if``/``while`` on a non-static parameter.
+  Under tracing this either raises ``TracerBoolConversionError`` or, worse,
+  burns the branch taken at trace time into every later call.  ``x is
+  None`` tests, shape-derived values (``len``, ``.shape``, ``.ndim``,
+  ``.size``, ``.dtype``), declared-static argnames and parameters annotated
+  as plain Python scalars (``bool``/``int``/``str``) are exempt.
+* ``TH002`` **host-sync** — ``.item()``, ``np.asarray``/``np.array``, or
+  ``float()``/``int()``/``bool()`` applied to a traced parameter inside a
+  jitted function: a device→host sync that blocks the trace.
+* ``TH003`` **import-frozen-routing** — module-level
+  ``jax.default_backend()`` / ``jax.devices()`` / ``os.environ`` reads.
+  The answer is captured at import, so later backend selection or env
+  changes are ignored (the ``_ON_TPU`` bug class).
+* ``TH004`` **first-call-frozen-routing** — an ``lru_cache``/``cache``
+  wrapped function whose body reads env vars or the backend: same bug one
+  call later (the frozen ``_default_kernel_min_n`` class).
+* ``TH005`` **unbucketed-dispatch** — a function that dispatches to a
+  Pallas/jitted entry and allocates padded device buffers with
+  data-dependent sizes, with no pow2/bucket discipline in sight: every
+  distinct shape compiles a fresh signature, bypassing the bucket ladder
+  that bounds recompilation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, SourceFile, register_rules
+
+__all__ = ["check", "RULES"]
+
+RULES = {
+    "TH001": "Python branch on a traced value inside a jitted function",
+    "TH002": "host sync (.item()/np.asarray/float()) inside a jitted function",
+    "TH003": "backend/env detection at import time freezes routing",
+    "TH004": "lru_cache over an env/backend read freezes routing after one call",
+    "TH005": "data-dependent device buffer sizes bypass the pow2 bucket ladder",
+}
+register_rules(RULES)
+
+_ENV_READ_FUNCS = {"os.environ.get", "os.getenv", "environ.get", "getenv"}
+_BACKEND_FUNCS = {"jax.default_backend", "jax.devices", "jax.local_devices",
+                  "default_backend", "devices", "local_devices"}
+_TRACING_WRAPPERS = {"jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap", "pmap",
+                     "pl.pallas_call", "pallas_call"}
+_STATIC_ANNOTATIONS = {"bool", "int", "str", "float"}
+_SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+_ALLOC_FUNCS = {"zeros", "full", "empty", "ones", "pad"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute chains / Names; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_env_read(call: ast.Call) -> bool:
+    d = _dotted(call.func)
+    if d in _ENV_READ_FUNCS:
+        return True
+    # os.environ["X"] subscripts (read or write targets are both captures).
+    return False
+
+
+def _has_env_subscript(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Subscript) \
+                and _dotted(sub.value) in ("os.environ", "environ"):
+            return True
+    return False
+
+
+def _reads_env_or_backend(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            if d in _ENV_READ_FUNCS or d in _BACKEND_FUNCS:
+                return True
+    return _has_env_subscript(node)
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    """static_argnames=("a", "b") keyword of a jit call/partial."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    out.add(sub.value)
+    return out
+
+
+def _collect_traced(tree: ast.Module) -> Dict[str, Set[str]]:
+    """Function name -> static argnames, for every traced function:
+    jit/vmap decorated, jit-wrapped in an assignment, or passed by name to
+    a tracing wrapper / lax control-flow combinator anywhere in the module.
+    """
+    traced: Dict[str, Set[str]] = {}
+
+    def mark(name: Optional[str], statics: Set[str]) -> None:
+        if name:
+            traced[name] = traced.get(name, set()) | statics
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                call = dec if isinstance(dec, ast.Call) else None
+                d = _dotted(call.func if call else dec)
+                if d in _TRACING_WRAPPERS:
+                    mark(node.name, _static_argnames(call) if call else set())
+                elif d in ("functools.partial", "partial") and call \
+                        and call.args and _dotted(call.args[0]) \
+                        in _TRACING_WRAPPERS:
+                    mark(node.name, _static_argnames(call))
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            args = node.args
+            if d in _TRACING_WRAPPERS and args \
+                    and isinstance(args[0], ast.Name):
+                mark(args[0].id, _static_argnames(node))
+            elif d in ("jax.lax.scan", "lax.scan") and args \
+                    and isinstance(args[0], ast.Name):
+                mark(args[0].id, set())
+            elif d in ("jax.lax.fori_loop", "lax.fori_loop") \
+                    and len(args) >= 3 and isinstance(args[2], ast.Name):
+                mark(args[2].id, set())
+            elif d in ("jax.lax.while_loop", "lax.while_loop"):
+                for a in args[:2]:
+                    if isinstance(a, ast.Name):
+                        mark(a.id, set())
+    return traced
+
+
+def _scalar_annotated(fn: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for arg in list(fn.args.args) + list(fn.args.kwonlyargs):
+        ann = arg.annotation
+        if ann is None:
+            continue
+        d = _dotted(ann)
+        if d in _STATIC_ANNOTATIONS:
+            out.add(arg.arg)
+    return out
+
+
+def _param_names(fn: ast.FunctionDef) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in a.args + a.kwonlyargs + a.posonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return {n for n in names if n != "self"}
+
+
+def _traced_names_in(expr: ast.AST, traced_params: Set[str]) -> List[ast.Name]:
+    """Name nodes of traced params in ``expr``, skipping shape-derived and
+    ``is None`` subtrees (static under tracing)."""
+    hits: List[ast.Name] = []
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+            return                     # x.shape / x.ndim: static under jit
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d == "len":
+                return                 # len(x): static shape info
+        if isinstance(node, ast.Compare) \
+                and all(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in node.ops):
+            return                     # x is None: resolved at trace time
+        if isinstance(node, ast.Name) and node.id in traced_params:
+            hits.append(node)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return hits
+
+
+def _check_traced_fn(src: SourceFile, fn: ast.FunctionDef,
+                     statics: Set[str], findings: List[Finding]) -> None:
+    traced_params = _param_names(fn) - statics - _scalar_annotated(fn)
+    # Nested defs are separate scopes (often themselves traced bodies with
+    # their own params); exclude their nodes from this function's walk.
+    nested_nodes = {id(x) for n in ast.walk(fn)
+                    if isinstance(n, ast.FunctionDef) and n is not fn
+                    for x in ast.walk(n)}
+
+    for node in ast.walk(fn):
+        if id(node) in nested_nodes:
+            continue
+        if isinstance(node, (ast.If, ast.While)):
+            for hit in _traced_names_in(node.test, traced_params):
+                findings.append(Finding(
+                    src.path, node.lineno, "TH001",
+                    f"branch on traced value `{hit.id}` inside jitted "
+                    f"`{fn.name}` (declare it static or use lax.cond/where)"))
+                break
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                findings.append(Finding(
+                    src.path, node.lineno, "TH002",
+                    f".item() host sync inside jitted `{fn.name}`"))
+            elif d in ("np.asarray", "np.array", "numpy.asarray",
+                       "numpy.array", "float", "int", "bool") and node.args:
+                if _traced_names_in(node.args[0], traced_params):
+                    findings.append(Finding(
+                        src.path, node.lineno, "TH002",
+                        f"`{d}` on a traced value inside jitted "
+                        f"`{fn.name}` forces a host round-trip"))
+
+
+def _check_module_level(src: SourceFile, findings: List[Finding]) -> None:
+    for stmt in src.tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Import, ast.ImportFrom)):
+            continue
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d in _BACKEND_FUNCS and d.startswith("jax."):
+                    findings.append(Finding(
+                        src.path, node.lineno, "TH003",
+                        f"module-level `{d}()` freezes backend routing at "
+                        "import; resolve per call"))
+                elif d in _ENV_READ_FUNCS:
+                    findings.append(Finding(
+                        src.path, node.lineno, "TH003",
+                        f"module-level env read `{d}` freezes the flag at "
+                        "import; resolve per call"))
+            elif isinstance(node, ast.Subscript) \
+                    and _dotted(node.value) in ("os.environ", "environ"):
+                findings.append(Finding(
+                    src.path, node.lineno, "TH003",
+                    "module-level os.environ access freezes the flag at "
+                    "import; resolve per call"))
+
+
+def _check_frozen_caches(src: SourceFile, findings: List[Finding]) -> None:
+    for node in ast.walk(src.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            d = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+            if d in ("functools.lru_cache", "lru_cache", "functools.cache",
+                     "cache"):
+                if _reads_env_or_backend(node):
+                    findings.append(Finding(
+                        src.path, node.lineno, "TH004",
+                        f"`{node.name}` caches an env/backend read: the "
+                        "routing flag freezes after the first call"))
+
+
+def _check_unbucketed(src: SourceFile, traced: Dict[str, Set[str]],
+                      findings: List[Finding]) -> None:
+    # Scope: the serving/solver dispatch paths plus the kernel packages,
+    # where query-dependent shapes arrive at jitted entries.  Arch/train
+    # builders compile once per fixed model config by design.
+    parts = src.path.split("/")
+    if not any(p in ("serve", "core", "kernels") for p in parts):
+        return
+    for fn in ast.walk(src.tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        tokens: Set[str] = set()
+        dispatches = False
+        allocs: List[Tuple[int, ast.Call]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name):
+                tokens.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                tokens.add(node.attr)
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func) or ""
+                leaf = d.rsplit(".", 1)[-1]
+                if leaf.endswith("_pallas") or leaf == "pallas_call" \
+                        or leaf in traced:
+                    dispatches = True
+                if leaf in _ALLOC_FUNCS and node.args \
+                        and any(isinstance(s, ast.Name)
+                                for s in ast.walk(node.args[0])):
+                    allocs.append((node.lineno, node))
+        # Referencing a jit-wrapped module symbol (e.g. `_fused`) counts as
+        # a dispatch even when called through an alias.
+        if tokens & set(traced):
+            dispatches = True
+        if not (dispatches and allocs):
+            continue
+        # Accepted shape disciplines: an explicit pow2/bucket ladder, a
+        # fixed chunk size, or Pallas block tiling (BlockSpec et al.).
+        if any(d in t.lower() for t in tokens
+               for d in ("pow2", "bucket", "chunk", "block")):
+            continue
+        line = allocs[0][0]
+        findings.append(Finding(
+            src.path, line, "TH005",
+            f"`{fn.name}` pads device buffers with data-dependent sizes "
+            "and dispatches to a kernel without a pow2/bucket ladder: "
+            "every distinct shape compiles a fresh signature"))
+
+
+def check(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    traced = _collect_traced(src.tree)
+    fns = {n.name: n for n in ast.walk(src.tree)
+           if isinstance(n, ast.FunctionDef)}
+    for name, statics in traced.items():
+        if name in fns:
+            _check_traced_fn(src, fns[name], statics, findings)
+    _check_module_level(src, findings)
+    _check_frozen_caches(src, findings)
+    _check_unbucketed(src, traced, findings)
+    return findings

@@ -43,7 +43,7 @@ import numpy as np
 
 from .clustering import kmeans_fit
 from . import pareto as _pareto
-from .pareto import pareto_mask_fast, pareto_mask_np
+from .pareto import _f32_tie_hazard, pareto_mask_fast, pareto_mask_np
 
 __all__ = ["HMOOCConfig", "HMOOCResult", "EffectiveSet", "hmooc_solve",
            "HmoocPlan", "subq_tuning", "build_candidates", "dag_aggregate",
@@ -392,10 +392,19 @@ def _ws_pick(Fn: np.ndarray, W: np.ndarray) -> np.ndarray:
     Routes through the ws_reduce Pallas kernel (one MXU matmul per bank)
     above the score-volume threshold; otherwise a float64 numpy einsum that
     reproduces the reference arithmetic bit-for-bit.
+
+    Routing is tie-tolerant, like ``pareto_mask_fast``: when any objective
+    column of ``Fn`` holds values that are distinct in float64 but collide
+    after the kernel's float32 cast, the weighted argmin itself could flip
+    under the cast, so such inputs take the float64 einsum regardless of
+    volume.  (Conservative input-level check — it catches the cast-
+    collision class; sums that tie only after f32 accumulation remain the
+    kernel regime's documented f32 semantics.)
     """
     N, m, B, k = Fn.shape
     nw = W.shape[0]
-    if N * m * B * nw >= _ws_min_scores():
+    if N * m * B * nw >= _ws_min_scores() \
+            and not _f32_tie_hazard(Fn.reshape(-1, k)):
         from ...kernels.ws_reduce import ws_reduce  # lazy: optional layer
         _, idx = ws_reduce(Fn.reshape(N * m, B, k), W)   # (nw, N*m)
         return np.asarray(idx, int).reshape(nw, N, m)
@@ -541,7 +550,14 @@ def dag_aggregate(
 
     fronts, tcs, sels = [], [], []
     if method == "hmooc2":
-        if N * m * B * n_ws_weights >= _ws_min_scores():
+        # Tie-tolerant routing (same contract as `pareto_mask_fast`): the
+        # fused kernel casts the bank to f32 for both the ws picks and the
+        # global Pareto filter, so banks whose f64-distinct objective values
+        # collide as f32 must take the per-candidate f64 numpy route even in
+        # the kernel volume regime.  Input-level check on F_bank covers Fn
+        # too (Fn is an affine renormalization of F_bank).
+        if N * m * B * n_ws_weights >= _ws_min_scores() \
+                and not _f32_tie_hazard(F_bank.reshape(-1, k)):
             return _hmooc2_all_fused(Uc, pool, F_bank, idx_bank,
                                      n_ws_weights)
         per_c: Sequence[Tuple[np.ndarray, np.ndarray]] = \

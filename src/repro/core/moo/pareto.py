@@ -36,10 +36,11 @@ __all__ = [
     "hypervolume",
 ]
 
-@functools.lru_cache(maxsize=None)
 def backend() -> str:
-    # Resolved lazily: jax.default_backend() initializes the XLA runtime,
-    # which must not happen as an import side effect.
+    # Resolved lazily — jax.default_backend() initializes the XLA runtime,
+    # which must not happen as an import side effect — and per *call*:
+    # caching the answer (the pre-PR-7 lru_cache) froze routing at the
+    # first use, so a backend initialized or overridden later was ignored.
     return jax.default_backend()
 
 
@@ -47,12 +48,13 @@ def backend() -> str:
 # the kernel wins early; on CPU hosts the interpret-mode kernel never beats
 # the O(n log n) numpy sweep, so the default keeps the numpy path (and its
 # float64 determinism) unless explicitly overridden.  None = resolve from
-# the env var / backend on first use (tests monkeypatch this directly).
+# the env var / backend per call (tests monkeypatch this directly).
 _KERNEL_MIN_N = None
 
 
-@functools.lru_cache(maxsize=None)
 def _default_kernel_min_n() -> int:
+    # Read per call, never cached: REPRO_PARETO_KERNEL_MIN_N flipped after
+    # import (tests, operators re-tuning a live process) must take effect.
     return int(os.environ.get(
         "REPRO_PARETO_KERNEL_MIN_N",
         "512" if backend() == "tpu" else str(1 << 30)))

@@ -194,7 +194,12 @@ def weighted_pick_batch(Fs: Sequence[np.ndarray],
     Fb = np.full((R, B, k), 1e18)
     for r, f in enumerate(Fn_kept):
         Fb[r, :f.shape[0]] = f
-    if R * B >= _hmooc._ws_min_scores():
+    # Tie-tolerant routing (same contract as `pareto_mask_fast`): the
+    # kernel computes the weighted argmin in f32, so batches whose
+    # f64-distinct normalized scores collide as f32 take the f64 numpy
+    # argmin regardless of volume.
+    if R * B >= _hmooc._ws_min_scores() \
+            and not _pareto._f32_tie_hazard(Fb.reshape(-1, k)):
         from ...kernels.ws_reduce import ws_reduce  # lazy: optional layer
         _, idx = ws_reduce(Fb, w[None, :])           # (1, R)
         j = np.asarray(idx, int)[0]

@@ -11,7 +11,13 @@ from .ref import attention_ref
 
 __all__ = ["flash_attention", "attention_ref"]
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _default_interpret() -> bool:
+    # Resolved per call, not at import: the active backend can change after
+    # this module is imported (jax.default_device, distributed init, tests
+    # faking a backend), and a frozen import-time answer would silently
+    # interpret-mode TPU runs or try to compile on CPU.
+    return jax.default_backend() != "tpu"
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -26,7 +32,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
     if interpret is None:
-        interpret = not _ON_TPU
+        interpret = _default_interpret()
     qf = q.reshape(B * Hq, Sq, D)
     kf = k.reshape(B * Hkv, k.shape[2], D)
     vf = v.reshape(B * Hkv, v.shape[2], D)

@@ -1,3 +1,4 @@
 from .ops import fused_ws_front, SEEN_BUCKETS
+from .ref import fused_ws_front_ref
 
-__all__ = ["fused_ws_front", "SEEN_BUCKETS"]
+__all__ = ["fused_ws_front", "fused_ws_front_ref", "SEEN_BUCKETS"]

@@ -1,0 +1,45 @@
+"""Pure-numpy oracle for the fused HMOOC2 aggregation kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["fused_ws_front_ref"]
+
+
+def _local_mask_np(P: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Non-dominated mask over one candidate's (nw, k) weight picks."""
+    le = (P[:, None, :] <= P[None, :, :]).all(-1)
+    lt = (P[:, None, :] < P[None, :, :]).any(-1)
+    dom = ((le & lt) & v[:, None]).any(0)
+    return v & ~dom
+
+
+def fused_ws_front_ref(Fn: np.ndarray, F_bank: np.ndarray, W: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reference :func:`..fused_solve.fused_ws_front`: same shapes, same
+    mixed-precision contract, no padding and no jit.
+
+    Weighted-sum scores and the global dominance compare run in float32
+    (the kernel regime's documented semantics); the objective-sum gather
+    and the per-candidate dominance mask keep float64.
+    """
+    N, m, B, k = F_bank.shape
+    nw = W.shape[0]
+    scores = np.einsum("wk,cmbk->cwmb", W.astype(np.float32),
+                       np.asarray(Fn, np.float32))         # (N, nw, m, B)
+    jj = np.argmin(scores, axis=-1).astype(np.int32)       # (N, nw, m)
+    cc = np.arange(N)[:, None, None]
+    ii = np.arange(m)[None, None, :]
+    G = np.asarray(F_bank, np.float64)[cc, ii, jj]         # (N, nw, m, k)
+    P_all = G.sum(axis=2)                                  # (N, nw, k)
+    ok = np.isfinite(G).all(axis=(2, 3))                   # (N, nw)
+    local = np.stack([_local_mask_np(P_all[c], ok[c]) for c in range(N)])
+    P32 = P_all.reshape(N * nw, k).astype(np.float32)
+    v = (ok & local).reshape(-1)
+    le = (P32[:, None, :] <= P32[None, :, :]).all(-1)
+    lt = (P32[:, None, :] < P32[None, :, :]).any(-1)
+    dom = ((le & lt) & v[:, None]).any(0)
+    keep = (v & ~dom).reshape(N, nw)
+    return jj, P_all, keep

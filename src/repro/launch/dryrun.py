@@ -1,7 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count="
-                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+# The env reads/write below must run before the first jax-touching import:
+# jax locks the host platform device count at first init, so import-time
+# module scope is the only place this works — suppressed by design.
+_flags = os.environ.get("XLA_FLAGS", "")  # repro: allow[TH003] pre-jax-init by design
+_n_dev = os.environ.get("DRYRUN_DEVICES", "512")  # repro: allow[TH003] pre-jax-init by design
+os.environ["XLA_FLAGS"] = (  # repro: allow[TH003] pre-jax-init by design
+    _flags + " --xla_force_host_platform_device_count=" + _n_dev).strip()
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 

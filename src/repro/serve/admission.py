@@ -291,7 +291,11 @@ class TenantScheduler:
         """
         dt_q = dt / max(n, 1)
         a = self.reserve_ewma
-        for name in set(tenant_names):
+        # dict.fromkeys, not set(): dedup must preserve arrival order so
+        # `state()` auto-registration order (and hence any downstream
+        # iteration over the tenant table) is a function of the transcript,
+        # not of the hash-randomized set order.
+        for name in dict.fromkeys(tenant_names):
             st = self.state(name)      # auto-registers off the OLD default
             st.reserve_q_s = (1 - a) * st.reserve_q_s + a * dt_q
         self.default_reserve_q_s = ((1 - a) * self.default_reserve_q_s

@@ -1,0 +1,12 @@
+"""Known-bad fixture: cache-key completeness.  Line numbers are pinned by
+tests/test_analysis.py — edit both together."""
+
+
+def template_key(q, cfg, cost):
+    return (q.benchmark, q.template, cfg, cost)  # line 6: CK001 (no model fp)
+
+
+def tune(cache, tenant, qid, weights):
+    _ = (tenant, weights)
+    key = (qid,)
+    cache.put(key, 1)                            # line 12: CK002 x2

@@ -1,0 +1,18 @@
+"""Known-bad fixture: tie-blind f32 kernel routing.  Line numbers are
+pinned by tests/test_analysis.py — edit both together."""
+
+
+def route(F):
+    from repro.kernels.ws_reduce import ws_reduce   # line 6: KP003
+    return ws_reduce(F, F)
+
+
+def guarded_route(F, tie_check):
+    if _f32_tie_hazard(F):
+        return None
+    from repro.kernels.pareto_filter import pareto_filter   # guarded: clean
+    return pareto_filter(F, F)
+
+
+def _f32_tie_hazard(F):
+    return False

@@ -1,0 +1,41 @@
+"""Known-bad fixture: trace hazards.  Line numbers are pinned by
+tests/test_analysis.py — edit both together."""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ON_TPU = jax.default_backend() == "tpu"         # line 10: TH003
+DEBUG = os.environ.get("FIXTURE_DEBUG", "0")    # line 11: TH003
+
+
+@jax.jit
+def branchy(x, n: int):
+    if x > 0:                                   # line 16: TH001
+        return x + n
+    return x - n
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def syncy(x, mode):
+    v = float(x)                                # line 23: TH002
+    w = x.item()                                # line 24: TH002
+    return v + w
+
+
+@functools.lru_cache(maxsize=None)
+def frozen_flag():                              # line 29: TH004
+    return os.environ.get("FIXTURE_ROUTE", "np")
+
+
+def dispatch(F):
+    n = F.shape[0]
+    buf = np.zeros((n, 4))                      # line 35: TH005
+    buf[:n] = F
+    return solve_pallas(jnp.asarray(buf))
+
+
+def solve_pallas(x):
+    return x

@@ -1,0 +1,5 @@
+"""Fixture kernel package with no ref.py and no parity test (KP001/KP002)."""
+
+
+def bad_op(x):
+    return x

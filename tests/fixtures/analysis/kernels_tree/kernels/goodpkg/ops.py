@@ -1,0 +1,5 @@
+"""Fixture kernel package with a ref and a registered parity test (clean)."""
+
+
+def good_op(x):
+    return x

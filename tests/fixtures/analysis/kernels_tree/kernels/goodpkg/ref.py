@@ -1,0 +1,5 @@
+"""Reference oracle for the goodpkg fixture."""
+
+
+def good_ref(x):
+    return x

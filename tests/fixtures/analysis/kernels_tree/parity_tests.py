@@ -1,0 +1,7 @@
+"""Fixture parity-test registry: exercises goodpkg only (badpkg -> KP002)."""
+from fixture.kernels.goodpkg.ops import good_op
+from fixture.kernels.goodpkg.ref import good_ref
+
+
+def test_goodpkg_parity():
+    assert good_op(3) == good_ref(3)

@@ -1,0 +1,25 @@
+"""Known-bad fixture: determinism leaks in a transcript-order path.
+Line numbers are pinned by tests/test_analysis.py — edit both together."""
+import random
+import time
+
+import numpy as np
+
+
+def stamp():
+    return time.time()                          # line 10: DT001
+
+
+def draw():
+    rng = np.random.default_rng()               # line 14: DT002
+    x = np.random.normal()                      # line 15: DT002
+    y = random.random()                         # line 16: DT002
+    return rng, x, y
+
+
+def iterate(names):
+    out = []
+    for n in set(names):                        # line 22: DT003
+        out.append(n)
+    pool = {1, 2, 3}
+    return out + list(pool)                     # line 25: DT003

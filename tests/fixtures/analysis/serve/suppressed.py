@@ -1,0 +1,12 @@
+"""Fixture: inline suppressions — justified, unjustified, comment-line form.
+Line numbers are pinned by tests/test_analysis.py — edit both together."""
+import time
+
+
+def stamp_ok():
+    return time.time()  # repro: allow[DT001] feeds the reported stats only
+
+
+def stamp_bare():
+    # repro: allow[DT001]
+    return time.time()  # line 12: suppressed, but SUP001 in strict

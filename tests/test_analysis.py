@@ -1,0 +1,103 @@
+"""Golden tests for the repro.analysis invariant suite.
+
+Each fixture under tests/fixtures/analysis/ is a known-bad file whose
+exact (line, rule) findings are pinned here; the suite's gate contract is
+pinned by the strict zero-findings run over the real src/ tree.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import run_paths
+from repro.analysis.core import SourceFile, run_files
+from repro.analysis import (cache_keys, determinism, kernel_parity,
+                            trace_hazards)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+
+
+def _findings(path, checker):
+    return sorted((f.line, f.rule) for f in checker(SourceFile(path)))
+
+
+def test_trace_hazard_fixture_golden():
+    assert _findings(FIXTURES / "core" / "bad_trace.py",
+                     trace_hazards.check) == [
+        (10, "TH003"), (11, "TH003"), (16, "TH001"), (23, "TH002"),
+        (24, "TH002"), (29, "TH004"), (35, "TH005")]
+
+
+def test_determinism_fixture_golden():
+    assert _findings(FIXTURES / "serve" / "bad_determinism.py",
+                     determinism.check) == [
+        (10, "DT001"), (14, "DT002"), (15, "DT002"), (16, "DT002"),
+        (22, "DT003"), (25, "DT003")]
+
+
+def test_determinism_scope_gate():
+    # Same leak patterns outside serve/, core/moo/, core/tuning/ are not
+    # transcript-ordered and must not be flagged.
+    assert determinism.check(
+        SourceFile(FIXTURES / "core" / "bad_trace.py")) == []
+
+
+def test_cache_key_fixture_golden():
+    assert _findings(FIXTURES / "bad_cache.py", cache_keys.check) == [
+        (6, "CK001"), (12, "CK002"), (12, "CK002")]
+
+
+def test_kernel_routing_fixture_golden():
+    # `route` is tie-blind (KP003); `guarded_route` reaches a tie_hazard
+    # check and is clean.
+    assert _findings(FIXTURES / "core" / "bad_routing.py",
+                     kernel_parity.check_file) == [(6, "KP003")]
+
+
+def test_kernel_registry_fixture_golden():
+    findings = kernel_parity.check_tree(
+        [str(FIXTURES / "kernels_tree")],
+        tests_dir=str(FIXTURES / "kernels_tree" / "parity_tests.py"))
+    got = sorted((Path(f.path).parent.name, f.rule) for f in findings)
+    assert got == [("badpkg", "KP001"), ("badpkg", "KP002")]
+
+
+def test_suppression_strict_requires_reason():
+    r = run_files([str(FIXTURES / "serve" / "suppressed.py")],
+                  [determinism.check], strict=True)
+    assert [(f.line, f.rule) for f in r.findings] == [(11, "SUP001")]
+    assert sorted((f.line, f.rule) for f in r.suppressed) == [
+        (7, "DT001"), (12, "DT001")]
+
+
+def test_suppression_lax_mode_silences_all():
+    r = run_files([str(FIXTURES / "serve" / "suppressed.py")],
+                  [determinism.check], strict=False)
+    assert r.findings == [] and len(r.suppressed) == 2
+
+
+def test_src_tree_strict_clean():
+    """The CI gate contract: the real tree has zero unsuppressed findings
+    and every suppression carries a written justification."""
+    result = run_paths([str(REPO / "src")], strict=True)
+    assert not result.parse_errors
+    assert [f.format() for f in result.findings] == []
+    assert result.suppressed, "expected documented intentional exceptions"
+
+
+def test_cli_exit_codes_and_report():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         str(FIXTURES / "serve" / "bad_determinism.py")],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert bad.returncode == 1
+    assert "DT001" in bad.stdout and "DT003" in bad.stdout
+    assert "description" in bad.stdout          # per-rule summary table
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict",
+         "--tests", str(FIXTURES / "kernels_tree" / "parity_tests.py"),
+         str(FIXTURES / "kernels_tree" / "kernels" / "goodpkg")],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert ok.returncode == 0, ok.stdout

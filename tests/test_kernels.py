@@ -71,18 +71,19 @@ def test_backend_detection_resolves_at_call_time(monkeypatch):
     """The interpret default must track the *current* backend, not the one
     active when the ops module was imported (backends can be initialized or
     overridden after import)."""
+    from repro.kernels.flash_attention import ops as fa_ops
     from repro.kernels.pareto_filter import ops as pf_ops
     from repro.kernels.ws_reduce import ops as ws_ops
 
     host = jax.default_backend()
-    assert pf_ops._default_interpret() is (host != "tpu")
-    assert ws_ops._default_interpret() is (host != "tpu")
+    for ops in (fa_ops, pf_ops, ws_ops):
+        assert ops._default_interpret() is (host != "tpu")
     monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
-    assert pf_ops._default_interpret() is False
-    assert ws_ops._default_interpret() is False
+    for ops in (fa_ops, pf_ops, ws_ops):
+        assert ops._default_interpret() is False
     monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
-    assert pf_ops._default_interpret() is True
-    assert ws_ops._default_interpret() is True
+    for ops in (fa_ops, pf_ops, ws_ops):
+        assert ops._default_interpret() is True
 
 
 def test_fused_ws_front_composed_solve():
@@ -110,6 +111,33 @@ def test_fused_ws_front_composed_solve():
     np.testing.assert_array_equal(keep.any(axis=1), cand_mask)
     assert (keep.sum(axis=1)[cand_mask] == nw).all()
     assert any(b[0] >= N and b[1] >= m for b in SEEN_BUCKETS)
+
+
+@pytest.mark.parametrize("N,m,B,k,nw", [(1, 1, 2, 2, 3), (3, 2, 8, 2, 11),
+                                        (7, 3, 16, 2, 6), (33, 5, 4, 2, 4)])
+def test_fused_ws_front_vs_ref(N, m, B, k, nw):
+    """Parity: the fused jit against the pure-numpy oracle, including banks
+    with padded (+inf) slots."""
+    from repro.kernels.fused_solve import fused_ws_front, fused_ws_front_ref
+
+    rng = np.random.default_rng(N * 1000 + m * 10 + B)
+    Fb = rng.random((N, m, B, k))
+    if B > 2:
+        Fb[:, :, -1] = np.inf         # padded bank slot everywhere
+        Fb[0, 0, -2] = np.inf
+    W = np.stack([np.linspace(0.05, 0.95, nw),
+                  1.0 - np.linspace(0.05, 0.95, nw)], -1)
+    lo = np.nanmin(np.where(np.isfinite(Fb), Fb, np.nan), axis=(1, 2),
+                   keepdims=True)
+    hi = np.nanmax(np.where(np.isfinite(Fb), Fb, np.nan), axis=(1, 2),
+                   keepdims=True)
+    Fn = np.where(np.isfinite(Fb), (Fb - lo) / np.where(hi > lo, hi - lo,
+                                                        1.0), 1e18)
+    jj, P_all, keep = fused_ws_front(Fn.astype(np.float32), Fb, W)
+    jr, Pr, kr = fused_ws_front_ref(Fn.astype(np.float32), Fb, W)
+    np.testing.assert_array_equal(jj, jr)
+    np.testing.assert_allclose(P_all, Pr, rtol=1e-12)
+    np.testing.assert_array_equal(keep, kr)
 
 
 def test_fused_ws_front_padding_invalid():

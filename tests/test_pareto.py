@@ -74,3 +74,43 @@ def test_invalid_rows_never_optimal_nor_dominating():
     valid = np.array([True, False, True])
     m = pareto_mask_np(np.array([[0.0, 0.0], [1.0, 1.0], [2.0, 2.0]]), valid)
     assert m.tolist() == [True, False, False]
+
+
+def test_routing_thresholds_track_env_after_import(monkeypatch):
+    """REPRO_PARETO_KERNEL_MIN_N flipped *after* import must take effect:
+    the pre-existing lru_cache froze the threshold (and the backend answer)
+    at first read, so a process re-tuned live kept stale routing."""
+    import jax
+
+    from repro.core.moo import pareto
+
+    monkeypatch.delenv("REPRO_PARETO_KERNEL_MIN_N", raising=False)
+    base = pareto._default_kernel_min_n()
+    monkeypatch.setenv("REPRO_PARETO_KERNEL_MIN_N", "7")
+    assert pareto._default_kernel_min_n() == 7
+    monkeypatch.setenv("REPRO_PARETO_KERNEL_MIN_N", "123456")
+    assert pareto._default_kernel_min_n() == 123456
+    monkeypatch.delenv("REPRO_PARETO_KERNEL_MIN_N")
+    assert pareto._default_kernel_min_n() == base
+    # The backend answer is live too, not captured at import/first call.
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert pareto.backend() == "tpu"
+    assert pareto._default_kernel_min_n() == 512
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert pareto.backend() == "cpu"
+
+
+def test_env_flip_changes_routing_and_results_agree(monkeypatch):
+    """Flipping the env threshold reroutes pareto_mask_fast to the kernel
+    path, and on tie-free inputs the mask is unchanged."""
+    from repro.core.moo import pareto
+
+    rng = np.random.default_rng(5)
+    F = np.round(rng.random((24, 2)), 3)        # f32-exact, tie-free cast
+    monkeypatch.setattr(pareto, "_KERNEL_MIN_N", None)
+    monkeypatch.setenv("REPRO_PARETO_KERNEL_MIN_N", str(1 << 30))
+    np_mask = pareto.pareto_mask_fast(F)
+    monkeypatch.setenv("REPRO_PARETO_KERNEL_MIN_N", "4")
+    kernel_mask = pareto.pareto_mask_fast(F)
+    np.testing.assert_array_equal(kernel_mask, np_mask)
+    np.testing.assert_array_equal(np_mask, pareto_mask_np(F))
