@@ -20,6 +20,7 @@ Benchmarks → paper artifacts:
   server_tenants    (ours)       multi-tenant fairness + per-tenant p99/Jain
   server_overload   (ours)       overload shedding: SLO classes past capacity
   server_model_solve (ours)      jitted model-backed solve vs legacy path
+  server_scenarios  (ours)       nonstationary scenarios: elastic vs static
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -104,6 +105,10 @@ def main() -> None:
             b, n=96 if args.full else 48) for b in benches],
         "server_model_solve": lambda: [bench_server.run_model_solve(
             b, n_batches=4 if args.full else 2) for b in benches],
+        # n_per_tenant=24 in both modes: shorter streams sit under the
+        # pressure regime the elastic-vs-static comparison is sized for.
+        "server_scenarios": lambda: [bench_server.run_scenarios(b)
+                                     for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,
         "kernels": bench_cluster.run_kernels,

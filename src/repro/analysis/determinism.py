@@ -2,10 +2,13 @@
 
 The golden bit-identity proofs (streaming output ≡ offline pipeline,
 batched solve ≡ sequential transcript, per-tenant determinism under any
-interleaving) only hold if nothing in the solver or serving transcript
-depends on wall-clock time, unseeded randomness, or hash-iteration order.
-This checker guards the transcript-ordered subtrees — ``serve/``,
-``core/moo/``, ``core/tuning/`` — against all three leak classes.
+interleaving, scenario replay-equivalence) only hold if nothing in the
+solver or serving transcript depends on wall-clock time, unseeded
+randomness, or hash-iteration order.  This checker guards the
+transcript-ordered subtrees — ``serve/``, ``core/moo/``,
+``core/tuning/``, and the scenario engine
+(``queryengine/scenarios.py``, whose builds must be pure functions of
+their seeds) — against all three leak classes.
 
 Rules:
 
@@ -40,8 +43,10 @@ RULES = {
 }
 register_rules(RULES)
 
-# Transcript-ordered subtrees (path-part sequences).
-_SCOPES = (("serve",), ("core", "moo"), ("core", "tuning"))
+# Transcript-ordered subtrees (path-part sequences; a sequence ending in
+# a ``.py`` part pins one module file).
+_SCOPES = (("serve",), ("core", "moo"), ("core", "tuning"),
+           ("queryengine", "scenarios.py"))
 
 _LEGACY_NP_RANDOM = {"rand", "randn", "randint", "random", "choice",
                      "shuffle", "permutation", "normal", "uniform",

@@ -283,6 +283,10 @@ def parametric_variants(benchmark: str, template: int, n: int, *,
             for v in range(start, start + n)]
 
 
+_STATIONARY_KINDS = ("poisson", "uniform", "fixed")
+_NONSTATIONARY_KINDS = ("diurnal", "spike", "ramp")
+
+
 @dataclasses.dataclass(frozen=True)
 class ArrivalModel:
     """Explicit, seeded arrival-time model for a serving stream.
@@ -292,21 +296,88 @@ class ArrivalModel:
     *timing* is reproducible and composable: the same query sequence can be
     replayed under different load shapes.
 
-    kinds:
+    Stationary kinds (constant ``rate_qps``):
       * ``poisson`` — exponential gaps with mean ``1/rate_qps`` (open-loop
         Poisson arrivals, the standard serving-load model);
       * ``uniform`` — gaps uniform on ``[0, 2/rate_qps]`` (same mean rate,
         bounded burstiness);
       * ``fixed``   — deterministic gaps of exactly ``1/rate_qps``.
+
+    Nonstationary kinds (inhomogeneous Poisson processes drawn by seeded
+    thinning against :meth:`rate_at`, so the whole time-varying stream is
+    still a pure function of the seed):
+      * ``diurnal`` — sinusoidal rate
+        ``rate_qps · (1 + amplitude·sin(2π·(t−start_s)/period_s))``:
+        the compressed diurnal traffic curve;
+      * ``spike``   — flash crowd: ``rate_qps`` outside the window,
+        ``rate_qps·spike_factor`` on ``[spike_at_s, spike_at_s+spike_dur_s)``;
+      * ``ramp``    — linear rate from ``rate_qps`` to ``ramp_to_qps``
+        over ``ramp_dur_s`` starting at ``start_s``, then holding.
     """
     kind: str = "poisson"
     rate_qps: float = 16.0
     start_s: float = 0.0
+    # diurnal
+    period_s: float = 60.0
+    amplitude: float = 0.8
+    # spike (flash crowd)
+    spike_at_s: float = 2.0
+    spike_dur_s: float = 2.0
+    spike_factor: float = 4.0
+    # ramp
+    ramp_to_qps: float = 32.0
+    ramp_dur_s: float = 4.0
+
+    def _validate(self) -> None:
+        if self.kind not in _STATIONARY_KINDS + _NONSTATIONARY_KINDS:
+            raise ValueError(f"unknown arrival kind: {self.kind!r}")
+        if self.rate_qps <= 0:
+            raise ValueError(f"rate_qps must be positive, got {self.rate_qps}")
+        if self.kind == "diurnal":
+            if not 0.0 <= self.amplitude < 1.0:
+                raise ValueError(
+                    f"amplitude must be in [0, 1), got {self.amplitude} "
+                    "(>= 1 would make the instantaneous rate nonpositive)")
+            if self.period_s <= 0:
+                raise ValueError(f"period_s must be positive, got "
+                                 f"{self.period_s}")
+        if self.kind == "spike" and (self.spike_factor <= 0
+                                     or self.spike_dur_s < 0):
+            raise ValueError("spike_factor must be positive and spike_dur_s "
+                             f"nonnegative, got {self.spike_factor}, "
+                             f"{self.spike_dur_s}")
+        if self.kind == "ramp" and (self.ramp_to_qps <= 0
+                                    or self.ramp_dur_s <= 0):
+            raise ValueError("ramp_to_qps and ramp_dur_s must be positive, "
+                             f"got {self.ramp_to_qps}, {self.ramp_dur_s}")
+
+    def rate_at(self, t: float) -> float:
+        """Instantaneous arrival rate (qps) at simulated time ``t``."""
+        self._validate()
+        if self.kind == "diurnal":
+            phase = 2.0 * np.pi * (t - self.start_s) / self.period_s
+            return self.rate_qps * (1.0 + self.amplitude * np.sin(phase))
+        if self.kind == "spike":
+            hot = self.spike_at_s <= t < self.spike_at_s + self.spike_dur_s
+            return self.rate_qps * (self.spike_factor if hot else 1.0)
+        if self.kind == "ramp":
+            frac = np.clip((t - self.start_s) / self.ramp_dur_s, 0.0, 1.0)
+            return float(self.rate_qps
+                         + (self.ramp_to_qps - self.rate_qps) * frac)
+        return self.rate_qps
+
+    def _max_rate(self) -> float:
+        if self.kind == "diurnal":
+            return self.rate_qps * (1.0 + self.amplitude)
+        if self.kind == "spike":
+            return self.rate_qps * max(self.spike_factor, 1.0)
+        if self.kind == "ramp":
+            return max(self.rate_qps, self.ramp_to_qps)
+        return self.rate_qps
 
     def draw(self, n: int, seed: int = 0) -> np.ndarray:
         """(n,) nondecreasing arrival times, deterministic per seed."""
-        if self.rate_qps <= 0:
-            raise ValueError(f"rate_qps must be positive, got {self.rate_qps}")
+        self._validate()
         rng = np.random.default_rng(np.random.SeedSequence([seed, 0xA221]))
         mean_gap = 1.0 / self.rate_qps
         if self.kind == "poisson":
@@ -316,17 +387,38 @@ class ArrivalModel:
         elif self.kind == "fixed":
             gaps = np.full(n, mean_gap)
         else:
-            raise ValueError(f"unknown arrival kind: {self.kind!r}")
+            # Inhomogeneous Poisson via thinning: candidate arrivals at the
+            # envelope rate, each accepted with probability
+            # rate_at(t)/rate_max — exact, and a pure function of the seed.
+            rmax = self._max_rate()
+            out = np.empty(n, np.float64)
+            got = 0
+            t = self.start_s
+            while got < n:
+                t += rng.exponential(1.0 / rmax)
+                if rng.random() * rmax < self.rate_at(t):
+                    out[got] = t
+                    got += 1
+            return out
         return self.start_s + np.cumsum(gaps)
 
 
 @dataclasses.dataclass(frozen=True)
 class StreamRequest:
-    """One timed tuning request of a serving stream."""
+    """One timed tuning request of a serving stream.
+
+    ``weights`` carries the tenant's preference weights *effective at this
+    request's arrival time*.  Stationary streams leave it ``None`` (the
+    server falls back to the tenant's registered weights); scenario streams
+    with mid-stream preference shifts stamp it per request at build time,
+    so the (request → weights) mapping is a pure function of the scenario
+    seed and replay-equivalence holds exactly across shift boundaries.
+    """
     rid: int                 # position in the stream (stable request id)
     query: Query
     arrival_s: float         # simulated-clock arrival time
     tenant: str = "default"  # issuing tenant (multi-tenant admission)
+    weights: Optional[Tuple[float, float]] = None  # None → tenant default
 
 
 SLO_CLASSES = ("strict", "degrade", "best_effort")
@@ -356,6 +448,12 @@ class TenantSpec:
     * ``"strict"`` — reject it outright (shed): the tenant prefers an
       explicit error over a blown budget, keeping its served tail inside
       the budget under overload.
+
+    ``rate_limit_qps`` arms a per-tenant token bucket *ahead of* the
+    waiting room: arrivals beyond the sustained rate (with a burst
+    allowance of ``rate_limit_burst`` tokens) are rejected at the door
+    with status ``"rate_limited"`` — they never enqueue, never solve, and
+    never consume a batch slot.  ``None`` (default) disables the limiter.
     """
     name: str
     weights: Optional[Tuple[float, float]] = None  # None → server default
@@ -364,6 +462,8 @@ class TenantSpec:
     priority: int = 0                # higher tiers compose first
     solve_budget_s: Optional[float] = None
     slo: str = "best_effort"         # overload policy: strict|degrade|best_effort
+    rate_limit_qps: Optional[float] = None   # None → no rate limiter
+    rate_limit_burst: float = 4.0            # bucket depth (tokens)
 
     def __post_init__(self):
         if not self.name:
@@ -374,6 +474,13 @@ class TenantSpec:
             raise ValueError(
                 f"unknown SLO class {self.slo!r}; expected one of "
                 f"{SLO_CLASSES}")
+        if self.rate_limit_qps is not None and self.rate_limit_qps <= 0:
+            raise ValueError(f"rate_limit_qps must be positive, got "
+                             f"{self.rate_limit_qps}")
+        if self.rate_limit_burst < 1.0:
+            raise ValueError(f"rate_limit_burst must be >= 1 (a bucket that "
+                             f"cannot hold one token admits nothing), got "
+                             f"{self.rate_limit_burst}")
 
 
 def _tenant_seed(seed: int, name: str) -> int:

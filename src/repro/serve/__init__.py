@@ -25,11 +25,17 @@ Streaming (both halves unified):
   priority tiers with overdue promotion (no starvation), and per-tenant
   SLO triage under overload (shed strict heads whose budget is
   unmeetable, flag degrade heads for the cheap compile path).
+* Elastic capacity: :class:`ElasticPolicy`/:class:`ElasticController`
+  autoscale the batch cap and arm preemptive degradation from a
+  queue-delay forecast; :class:`TokenBucket` rate-limits per tenant
+  ahead of the waiting room.
 """
-from .admission import Admit, TenantScheduler, TenantState
+from .admission import (Admit, ElasticController, ElasticPolicy,
+                        TenantScheduler, TenantState, TokenBucket)
 from .cache import CandidatePoolCache, EffectiveSetCache
 from .runtime import RuntimeSession, RuntimeSessionStats
-from .server import (OptimizerServer, ServedQuery, ServerConfig, ServerStats,
+from .server import (REJECTED_STATUSES, OptimizerServer, ServedQuery,
+                     ServerConfig, ServerStats, ServiceTimeModel,
                      jain_index)
 from .service import ResponseCache, TuningService, tune_batch
 
@@ -37,4 +43,5 @@ __all__ = ["EffectiveSetCache", "TuningService", "tune_batch",
            "ResponseCache", "RuntimeSession", "RuntimeSessionStats",
            "CandidatePoolCache", "OptimizerServer", "ServerConfig",
            "ServedQuery", "ServerStats", "TenantScheduler", "TenantState",
-           "Admit", "jain_index"]
+           "Admit", "jain_index", "ElasticPolicy", "ElasticController",
+           "TokenBucket", "ServiceTimeModel", "REJECTED_STATUSES"]

@@ -53,7 +53,8 @@ from typing import Deque, Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 from ..queryengine.workloads import TenantSpec
 
-__all__ = ["TenantScheduler", "TenantState", "Admit"]
+__all__ = ["TenantScheduler", "TenantState", "Admit", "TokenBucket",
+           "ElasticPolicy", "ElasticController"]
 
 
 class Admit(NamedTuple):
@@ -66,6 +67,155 @@ class Admit(NamedTuple):
     tenant: str
     item: object
     degrade: bool = False
+
+
+@dataclasses.dataclass
+class TokenBucket:
+    """Per-tenant rate limiter ahead of the waiting room.
+
+    A bucket holds at most ``burst`` tokens and refills continuously at
+    ``rate_qps``; each admitted arrival takes one token, and an arrival
+    finding less than a whole token is rejected at the door (status
+    ``"rate_limited"`` — never enqueued, never solved).  The bucket is
+    clocked by *arrival* times, which are a pure function of the stream,
+    so the admit/reject pattern is deterministic per seed regardless of
+    how fast the server happens to be running.
+
+    Invariants (property-tested in ``tests/test_admission.py``):
+
+    * never admits more than ``burst`` arrivals at one instant;
+    * over any span, admits at most ``burst + elapsed · rate_qps`` tokens'
+      worth (token conservation);
+    * after an idle gap of ``1 / rate_qps`` at least one token is always
+      available (no starvation — churny traffic cannot wedge the bucket).
+    """
+    rate_qps: float
+    burst: float
+    tokens: float = math.nan         # NaN → starts full (= burst)
+    clock_s: float = -math.inf       # last refill instant (monotone)
+
+    def __post_init__(self):
+        if self.rate_qps <= 0:
+            raise ValueError(f"rate_qps must be positive, got "
+                             f"{self.rate_qps}")
+        if self.burst < 1.0:
+            raise ValueError(f"burst must be >= 1, got {self.burst}")
+        if math.isnan(self.tokens):
+            self.tokens = self.burst
+
+    def take(self, now: float) -> bool:
+        """Refill to ``now`` and take one token; False = rate-limited.
+
+        Out-of-order calls (``now`` before the bucket clock) refill
+        nothing — time never runs backwards for the token supply.
+        """
+        if now > self.clock_s:
+            if math.isfinite(self.clock_s):
+                self.tokens = min(self.burst, self.tokens
+                                  + (now - self.clock_s) * self.rate_qps)
+            self.clock_s = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPolicy:
+    """Elastic capacity policy: how the server autoscales per flush.
+
+    The controller keeps an EWMA *forecast* of queue delay over flush
+    windows and scales the base ``max_batch`` by the pressure ratio
+    ``forecast / target_delay_s`` whenever the forecast exceeds the
+    target (the scaling is clipped to ``[min_batch, max_batch]``, but a
+    base cap already above the ceiling passes through unclamped) —
+    bigger batches amortize the solve when the waiting room is falling
+    behind.  The same
+    forecast drives *preemptive degradation*: as forecast headroom
+    against the solve budget shrinks below ``degrade_frac · budget``,
+    degrade-class heads are routed to the cheap path with a positive
+    lead time — before the budget actually blows — instead of at the
+    deadline.
+    """
+    min_batch: int = 1
+    max_batch: int = 32              # elastic ceiling on the batch cap
+    target_delay_s: float = 0.5      # queue-delay forecast target
+    ewma: float = 0.4                # EWMA weight of the newest window
+    degrade_frac: float = 0.5        # preemptive-degrade headroom fraction
+
+    def __post_init__(self):
+        if not 1 <= self.min_batch <= self.max_batch:
+            raise ValueError(f"need 1 <= min_batch <= max_batch, got "
+                             f"{self.min_batch}, {self.max_batch}")
+        if self.target_delay_s <= 0:
+            raise ValueError(f"target_delay_s must be positive, got "
+                             f"{self.target_delay_s}")
+        if not 0.0 < self.ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {self.ewma}")
+        if not 0.0 <= self.degrade_frac <= 1.0:
+            raise ValueError(f"degrade_frac must be in [0, 1], got "
+                             f"{self.degrade_frac}")
+
+
+class ElasticController:
+    """Queue-delay forecast + the three controls derived from it.
+
+    Monotonicity contract (property-tested): with everything else fixed,
+    a higher forecast never *lowers* :meth:`batch_cap`, never *raises*
+    :meth:`headroom_s`, and never lowers :meth:`degrade_lead_s` — the
+    controller always reacts to more pressure with at least as much
+    capacity and at least as early degradation.
+    """
+
+    def __init__(self, policy: ElasticPolicy):
+        self.policy = policy
+        self.forecast_s = 0.0            # EWMA queue delay over flushes
+        self.n_windows = 0
+
+    def note_flush(self, queue_delay_s: float) -> None:
+        """Fold one flush's observed queue delay (mean wait of the batch
+        at compose time) into the forecast."""
+        a = self.policy.ewma
+        self.forecast_s = ((1 - a) * self.forecast_s
+                           + a * max(queue_delay_s, 0.0))
+        self.n_windows += 1
+
+    def batch_cap(self, base_cap: int) -> int:
+        """Elastic batch cap: base capacity scaled by forecast pressure.
+
+        ``max_batch`` bounds the *scaling*, never the provisioned base:
+        a capacity event that raises ``base_cap`` above the elastic
+        ceiling is honored as-is — elasticity only ever adds capacity on
+        top of what the deployment provides.
+        """
+        p = self.policy
+        pressure = max(1.0, self.forecast_s / p.target_delay_s)
+        cap = min(int(math.floor(base_cap * pressure)), p.max_batch)
+        return max(p.min_batch, base_cap, cap)
+
+    def flush_budget_s(self, reserve_q_s: float, base_cap: int) -> float:
+        """Expected solve cost of one full elastic flush."""
+        return reserve_q_s * self.batch_cap(base_cap)
+
+    def headroom_s(self, budget_s: float, reserve_q_s: float,
+                   base_cap: int) -> float:
+        """Budget slack left after the forecast delay and a full flush.
+
+        Monotone nonincreasing in the forecast: delay subtracts directly
+        and a larger elastic cap only grows the flush cost.
+        """
+        return (budget_s - self.forecast_s
+                - self.flush_budget_s(reserve_q_s, base_cap))
+
+    def degrade_lead_s(self, budget_s: float, reserve_q_s: float,
+                       base_cap: int) -> float:
+        """How far *ahead of* the deadline degrade-class heads should be
+        routed to the cheap path (0 = only at the deadline, the PR-5
+        behavior).  Grows as headroom shrinks below
+        ``degrade_frac · budget``; clipped to ``[0, budget]``."""
+        head = self.headroom_s(budget_s, reserve_q_s, base_cap)
+        lead = self.policy.degrade_frac * budget_s - head
+        return float(min(max(lead, 0.0), budget_s))
 
 
 @dataclasses.dataclass
@@ -82,10 +232,12 @@ class TenantState:
     deficit: float = 0.0             # DRR credit carried across flushes
     queue: Deque[Tuple[float, object]] = dataclasses.field(
         default_factory=deque)       # (arrival_s, item) FIFO
+    bucket: Optional[TokenBucket] = None   # None → no rate limiter
     n_enqueued: int = 0
     n_dequeued: int = 0
     n_shed: int = 0                  # strict-SLO rejections (never solved)
     n_degraded: int = 0              # degrade-SLO cheap-path admissions
+    n_rate_limited: int = 0          # door rejections (never enqueued)
     slots_granted: int = 0           # batch slots over the scheduler's life
 
     @property
@@ -122,7 +274,10 @@ class TenantScheduler:
                 budget_s=(spec.solve_budget_s if spec.solve_budget_s
                           is not None else budget_s),
                 slo=spec.slo,
-                reserve_q_s=reserve_q_s)
+                reserve_q_s=reserve_q_s,
+                bucket=(TokenBucket(spec.rate_limit_qps,
+                                    spec.rate_limit_burst)
+                        if spec.rate_limit_qps is not None else None))
 
     # -- registry ------------------------------------------------------------
     def state(self, name: str) -> TenantState:
@@ -141,6 +296,24 @@ class TenantScheduler:
         st = self.state(name)
         st.queue.append((arrival_s, item))
         st.n_enqueued += 1
+
+    def admit_arrival(self, name: str, item: object,
+                      arrival_s: float) -> bool:
+        """Door admission: rate-limit check, then enqueue.
+
+        Returns False (and enqueues nothing) when the tenant's token
+        bucket rejects the arrival — the server records the request as
+        ``rate_limited``.  The bucket is clocked by the arrival time, a
+        pure function of the stream, so rejections are deterministic per
+        seed.  Tenants without a configured bucket always admit.
+        """
+        st = self.state(name)
+        if st.bucket is not None and not st.bucket.take(arrival_s):
+            st.n_rate_limited += 1
+            return False
+        st.queue.append((arrival_s, item))
+        st.n_enqueued += 1
+        return True
 
     def total_waiting(self) -> int:
         return sum(st.waiting for st in self._states.values())
@@ -206,7 +379,8 @@ class TenantScheduler:
             shed.append((st.name, item))
 
     # -- batch composition ---------------------------------------------------
-    def compose(self, now: float, cap: int) -> List[Admit]:
+    def compose(self, now: float, cap: int,
+                degrade_lead_s: float = 0.0) -> List[Admit]:
         """Draw one micro-batch of at most ``cap`` items.
 
         Overdue heads first (any tier, oldest arrival first — the
@@ -224,6 +398,12 @@ class TenantScheduler:
         at full quality in the batch it joins).  Per-tenant slot grants
         are recorded in :attr:`TenantState.slots_granted`; their sum
         always equals the number of items returned (conservation).
+
+        ``degrade_lead_s`` arms *preemptive* degradation (elastic
+        control): degrade-SLO heads are tested against ``now + lead``
+        instead of ``now``, routing them to the cheap path before the
+        budget actually blows.  The lead shifts only the degrade flag,
+        never pop order or shedding — capacity policy, not fairness.
         """
         picked: List[Admit] = []
         while len(picked) < cap:
@@ -236,7 +416,7 @@ class TenantScheduler:
                 break
             st = min(over, key=lambda s: (s.head_arrival(), s.name))
             degrade = st.slo == "degrade" \
-                and self.unmeetable(st, now, cap, n_p)
+                and self.unmeetable(st, now + degrade_lead_s, cap, n_p)
             picked.append(self._pop(st, degrade))
             # Promotion is not free slot-wise: consume any banked credit
             # (never below the standard empty-queue reset of 0, which also
@@ -258,7 +438,8 @@ class TenantScheduler:
                 st.deficit += st.share / qmax
                 while st.deficit >= 1.0 and st.queue and len(picked) < cap:
                     degrade = st.slo == "degrade" \
-                        and self.unmeetable(st, now, cap, len(picked))
+                        and self.unmeetable(st, now + degrade_lead_s, cap,
+                                            len(picked))
                     picked.append(self._pop(st, degrade))
                     st.deficit -= 1.0
                 if not st.queue:

@@ -49,8 +49,10 @@ determinism invariant extends to overload).
 
 Clock model: arrivals advance on the simulated clock; optimizer work
 (compile solves, fusion rounds, realization) advances it by measured wall
-time.  Batch composition therefore depends on timing — but no per-query
-*output* does: compile-time results are per-query deterministic (caches
+time — or, with ``ServerConfig.clock`` set to a :class:`ServiceTimeModel`,
+by a calibrated deterministic cost model, making the whole admission
+timeline a pure function of the stream and the config.  Batch composition
+therefore depends on timing — but no per-query *output* does: compile-time results are per-query deterministic (caches
 are exact and tenant-scoped) and every runtime decision depends only on
 the query's own candidate rows and its tenant's weights, so the served
 plans and objectives are bit-identical to the offline ``tune_batch`` →
@@ -81,14 +83,89 @@ from ..core.moo.hmooc import HMOOCConfig
 from ..core.tuning.compile_time import CompileTimeResult
 from ..queryengine.aqe import AQEResult
 from ..queryengine.workloads import StreamRequest, TenantSpec
-from .admission import TenantScheduler
+from .admission import ElasticController, ElasticPolicy, TenantScheduler
 from .runtime import RuntimeSession
 from .service import TuningService
 
 __all__ = ["OptimizerServer", "ServerConfig", "ServedQuery", "ServerStats",
-           "jain_index"]
+           "ServiceTimeModel", "jain_index", "REJECTED_STATUSES"]
 
 Weights = Tuple[float, float]
+
+# Statuses that never produced a plan: excluded from latency percentiles,
+# counted against goodput.
+REJECTED_STATUSES = ("shed", "rate_limited")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceTimeModel:
+    """Deterministic charged-time model for the simulated clock.
+
+    By default :meth:`OptimizerServer.serve` charges *measured wall time*
+    for optimizer work, so batch composition — and with it every
+    shed/degrade/scale decision — inherits host timing noise.  A
+    ``ServiceTimeModel`` replaces those charges with a calibrated cost
+    model, making ``serve()`` a pure function of the stream and the
+    config: two runs over the same scenario charge identical clock
+    windows, flush identical batches, and reach identical admission
+    outcomes.  Per-query *outputs* are clock-independent either way (the
+    golden replay invariant); what the model pins down is the admission
+    *timeline*, which is exactly what policy benchmarks (elastic vs
+    static capacity) need to compare free of noise.
+
+    ``flush_points`` is a sorted ``((batch_size, seconds), ...)`` table
+    of calibrated flush costs (compile solve + admission for one
+    micro-batch of that size); charges interpolate linearly between knots
+    and extrapolate the outermost segments, clamped at 0.  ``round_s`` is
+    charged per fusion round (step + retire + realize).
+
+    Not every batch member costs a full solve: response-cache hits and
+    degraded queries (template-bank reuse, default θ) skip the solver and
+    cost well under a millisecond where a fresh solve costs tens.
+    ``flush_s`` therefore takes the number of such *cheap* members and
+    charges ``flush_s(n_full) + n_cheap * cheap_s`` — pricing the very
+    mechanism preemptive degradation exploits (converting full solves
+    into cheap ones under pressure) instead of flattening it into a
+    size-only charge.  Calibrate all three from measured warm flush
+    windows — see ``benchmarks/bench_server.py run_scenarios``.
+    """
+    flush_points: Tuple[Tuple[int, float], ...]
+    round_s: float = 0.0
+    cheap_s: float = 0.0
+
+    def __post_init__(self):
+        pts = tuple(sorted((int(n), float(s)) for n, s in self.flush_points))
+        object.__setattr__(self, "flush_points", pts)
+        if not pts:
+            raise ValueError("flush_points needs at least one knot")
+        if pts[0][0] < 1 or len({n for n, _ in pts}) != len(pts):
+            raise ValueError(f"batch-size knots must be unique and >= 1, "
+                             f"got {pts}")
+        bad = [s for _, s in pts] + [self.round_s, self.cheap_s]
+        if any(not math.isfinite(s) or s < 0.0 for s in bad):
+            raise ValueError(f"costs must be finite and >= 0, got {bad}")
+
+    def flush_s(self, n: int, n_cheap: int = 0) -> float:
+        """Charged cost of flushing ``n`` queries, ``n_cheap`` of which
+        skipped the full solver (cache hits / degraded paths)."""
+        n_cheap = min(max(int(n_cheap), 0), int(n))
+        full = int(n) - n_cheap
+        return self._interp(full) + n_cheap * self.cheap_s
+
+    def _interp(self, n: int) -> float:
+        if n <= 0:
+            return 0.0
+        pts = self.flush_points
+        if len(pts) == 1:
+            return pts[0][1]
+        if n <= pts[0][0]:
+            (n0, s0), (n1, s1) = pts[0], pts[1]
+        elif n >= pts[-1][0]:
+            (n0, s0), (n1, s1) = pts[-2], pts[-1]
+        else:
+            i = next(i for i in range(1, len(pts)) if n <= pts[i][0])
+            (n0, s0), (n1, s1) = pts[i - 1], pts[i]
+        return max(s0 + (s1 - s0) * (n - n0) / (n1 - n0), 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +179,8 @@ class ServerConfig:
     reserve_ewma: float = 0.3          # EWMA weight of the newest solve
     admit_mid_session: bool = True     # late arrivals join the running session
     isolate_tenant_pools: bool = True  # tenant-scoped candidate-pool entries
+    elastic: Optional[ElasticPolicy] = None  # None → static capacity
+    clock: Optional[ServiceTimeModel] = None  # None → measured wall time
 
 
 @dataclasses.dataclass
@@ -116,16 +195,19 @@ class ServedQuery:
       (template-cache banks / Spark defaults, no fresh Algorithm 1);
     * ``"shed"``     — budget was unmeetable and the tenant's SLO class is
       ``strict``: rejected without solving (``ct``/``result`` stay None;
-      ``finished_s`` records the rejection time).
+      ``finished_s`` records the rejection time);
+    * ``"rate_limited"`` — rejected at the door by the tenant's token
+      bucket: never enqueued, never composed, never solved
+      (``finished_s`` is the arrival time).
 
-    Latency reports must aggregate over finished (non-shed) queries only —
-    a shed query's ``compiled_s`` is NaN by construction.
+    Latency reports must aggregate over finished (non-rejected) queries
+    only — a shed query's ``compiled_s`` is NaN by construction.
     """
     rid: int
     request: StreamRequest
     arrival_s: float
     tenant: str = "default"
-    status: str = "served"             # served | degraded | shed
+    status: str = "served"      # served | degraded | shed | rate_limited
     admitted_s: float = math.nan       # micro-batch flush began
     compiled_s: float = math.nan       # compile-time θ ready
     finished_s: float = math.nan       # final plan realized (or shed time)
@@ -148,11 +230,12 @@ class ServedQuery:
 @dataclasses.dataclass
 class ServerStats:
     n_queries: int = 0
-    n_finished: int = 0                # solved to completion (non-shed)
+    n_finished: int = 0                # solved to completion (non-rejected)
     n_micro_batches: int = 0
     n_joined_running: int = 0          # admissions into a live session
     n_shed: int = 0                    # strict-SLO rejections
     n_degraded: int = 0                # degrade-SLO cheap-path admissions
+    n_rate_limited: int = 0            # token-bucket door rejections
     rounds: int = 0                    # fusion rounds over the run
     makespan_s: float = 0.0            # last finish − first arrival (sim)
     wall_time_s: float = 0.0           # real time spent in serve()
@@ -167,6 +250,9 @@ class ServerStats:
     # jitted-solve benchmarks report p99 solve latency from.
     tune_windows: List[Tuple[float, int]] = dataclasses.field(
         default_factory=list)
+    # Per-flush batch cap in effect at compose time (capacity events +
+    # elastic scaling visible per flush; constant without either).
+    flush_caps: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def qps(self) -> float:
@@ -224,6 +310,10 @@ class OptimizerServer:
             tenants, budget_s=config.solve_budget_s,
             reserve_q_s=config.solve_reserve_s,
             reserve_ewma=config.reserve_ewma)
+        # Long-lived like the scheduler: the queue-delay forecast keeps
+        # amortizing across serve() epochs.
+        self.elastic = (ElasticController(config.elastic)
+                        if config.elastic is not None else None)
         self.last_run = ServerStats()
 
     # -- per-tenant policy ---------------------------------------------------
@@ -232,12 +322,27 @@ class OptimizerServer:
         return tuple(w) if w is not None else tuple(self.weights)
 
     # -- main loop -----------------------------------------------------------
-    def serve(self, requests: Sequence[StreamRequest]) -> List[ServedQuery]:
+    def serve(self, requests: Sequence[StreamRequest], *,
+              capacity_events: Sequence[Tuple[float, int]] = ()
+              ) -> List[ServedQuery]:
         """Serve a timed stream to completion; results in request order.
 
         Each returned :class:`ServedQuery` carries the compile-time result,
         the realized :class:`AQEResult`, and the simulated-clock lifecycle
         times the latency metrics derive from.
+
+        ``capacity_events`` is an optional ``(at_s, max_batch)`` timeline
+        (e.g. :attr:`~repro.queryengine.scenarios.Scenario.capacity_events`)
+        changing the server's *base* batch cap on the simulated clock —
+        modelling executors joining/leaving the deployment.  With
+        ``config.elastic`` set, an :class:`ElasticController` additionally
+        scales the base cap from its queue-delay forecast and arms
+        preemptive degradation of ``degrade``-class heads.
+
+        A request whose ``StreamRequest.weights`` is set is solved under
+        exactly those weights (scenario streams stamp mid-stream
+        preference shifts per request at build time); otherwise the
+        tenant's registered weights apply.
         """
         wall0 = time.perf_counter()
         cfgv = self.config
@@ -268,17 +373,41 @@ class OptimizerServer:
         n_joined_running = 0
         n_shed = 0
         n_degraded = 0
+        n_rate_limited = 0
         flush_windows: List[Tuple[float, int]] = []
         tune_windows: List[Tuple[float, int]] = []
+        flush_caps: List[int] = []
         flushes_since_round = 0
         rounds0 = self.session.rounds_total
         slots0 = {st.name: st.slots_granted for st in sched.states()}
+        cap_events = sorted(((float(at), int(mb))
+                             for at, mb in capacity_events),
+                            key=lambda e: e[0])
+        ev_pos = 0
+        base_cap = cfgv.max_batch
+
+        def apply_capacity(now: float) -> None:
+            nonlocal ev_pos, base_cap
+            while ev_pos < len(cap_events) and cap_events[ev_pos][0] <= now:
+                base_cap = cap_events[ev_pos][1]
+                ev_pos += 1
+
+        def cur_cap() -> int:
+            return (self.elastic.batch_cap(base_cap) if self.elastic
+                    else base_cap)
 
         def admit_arrived(now: float) -> None:
-            nonlocal pos
+            nonlocal pos, n_rate_limited
             while pos < len(incoming) and incoming[pos].arrival_s <= now:
                 s = incoming[pos]
-                sched.enqueue(s.tenant, s, s.arrival_s)
+                if sched.admit_arrival(s.tenant, s, s.arrival_s):
+                    pos += 1
+                    continue
+                # Door rejection: the token bucket (clocked by arrival
+                # times) said no — a first-class outcome, never solved.
+                s.status = "rate_limited"
+                s.finished_s = s.arrival_s
+                n_rate_limited += 1
                 pos += 1
 
         def flush_due(now: float) -> bool:
@@ -291,13 +420,13 @@ class OptimizerServer:
                 # arrivals can never starve in-flight queries of the rounds
                 # they need to finish.
                 return cfgv.admit_mid_session and flushes_since_round < 1
-            if sched.total_waiting() >= cfgv.max_batch:
+            if sched.total_waiting() >= cur_cap():
                 return True
             if pos >= len(incoming):
                 # End of stream: nothing else will arrive, waiting longer
                 # only adds latency.
                 return True
-            return sched.deadline_due(now, cfgv.max_batch)
+            return sched.deadline_due(now, cur_cap())
 
         def finish(cohort, results, now: float) -> None:
             for e, res in zip(cohort, results):
@@ -307,27 +436,43 @@ class OptimizerServer:
                 in_flight.pop(s.rid, None)
 
         admit_arrived(t)
+        apply_capacity(t)
         while pos < len(incoming) or sched.total_waiting() or in_flight:
+            apply_capacity(t)
             if flush_due(t):
+                cap = cur_cap()
                 # Overload triage first: strict-SLO requests whose budget is
                 # already unmeetable are rejected here — first-class
                 # outcomes, never solved, never poisoning latency stats.
-                for _, s in sched.shed_unmeetable(t, cfgv.max_batch):
+                for _, s in sched.shed_unmeetable(t, cap):
                     s.status = "shed"
                     s.finished_s = t
                     n_shed += 1
-                admits = sched.compose(t, cfgv.max_batch)
+                lead = (self.elastic.degrade_lead_s(
+                            cfgv.solve_budget_s, sched.default_reserve_q_s,
+                            base_cap)
+                        if self.elastic else 0.0)
+                admits = sched.compose(t, cap, lead)
                 if not admits:
                     continue           # everything waiting was shed
                 batch = [a.item for a in admits]
                 n_batches += 1
                 flushes_since_round += 1
+                flush_caps.append(cap)
+                if self.elastic:
+                    # Observed queue delay of this flush (mean wait at
+                    # compose time) feeds the forecast for the next one.
+                    self.elastic.note_flush(
+                        sum(t - s.arrival_s for s in batch) / len(batch))
                 for a, s in zip(admits, batch):
                     s.admitted_s = t
                     if a.degrade:
                         s.status = "degraded"
                         n_degraded += 1
-                batch_w = [self.tenant_weights(s.tenant) for s in batch]
+                batch_w = [tuple(s.request.weights)
+                           if s.request.weights is not None
+                           else self.tenant_weights(s.tenant)
+                           for s in batch]
                 t0 = time.perf_counter()
                 cts = self.tuning.tune_batch(
                     [s.request.query for s in batch], batch_w,
@@ -346,12 +491,20 @@ class OptimizerServer:
                         pool_scope=(s.tenant if cfgv.isolate_tenant_pools
                                     else None))
                     in_flight[s.rid] = s
-                # One window measurement feeds both the clock charge and the
-                # reserve EWMA: the whole flush — the batched solve plus
-                # each query's initial AQE planning step inside admit().
+                # One window feeds both the clock charge and the reserve
+                # EWMA: the whole flush — the batched solve plus each
+                # query's initial AQE planning step inside admit().
                 # (Feeding note_solve only the tune_batch slice made the
                 # reserve undershoot the true per-query admission cost.)
-                window = time.perf_counter() - t0
+                # Under a ServiceTimeModel the charged window is the
+                # model's, so the admission timeline is deterministic.
+                # Cheap members (cache hits + degraded paths, per the
+                # tuning service's own accounting of the flush we just
+                # ran) are priced at cheap_s instead of the solve curve.
+                n_cheap = len(batch) - self.tuning.last_batch.n_solved
+                window = (cfgv.clock.flush_s(len(batch), n_cheap)
+                          if cfgv.clock is not None
+                          else time.perf_counter() - t0)
                 sched.note_solve(window, len(batch),
                                  (s.tenant for s in batch))
                 flush_windows.append((window, len(batch)))
@@ -366,29 +519,37 @@ class OptimizerServer:
                 self.session.step_round()
                 done = self.session.retire_ready()
                 results = self.session.realize(done) if done else []
-                t += time.perf_counter() - t0
+                t += (cfgv.clock.round_s if cfgv.clock is not None
+                      else time.perf_counter() - t0)
                 if done:
                     finish(done, results, t)
                 admit_arrived(t)
                 continue
-            # Idle: jump the simulated clock to the next event.
+            # Idle: jump the simulated clock to the next event (arrival,
+            # flush deadline, or capacity change — a cap drop can make the
+            # waiting pool flush-ready with no new arrival).
             nxt = min(incoming[pos].arrival_s if pos < len(incoming)
                       else math.inf,
-                      sched.next_deadline(cfgv.max_batch))
+                      sched.next_deadline(cur_cap()),
+                      cap_events[ev_pos][0] if ev_pos < len(cap_events)
+                      else math.inf)
             if not math.isfinite(nxt):
                 break
             t = max(t, nxt)
             admit_arrived(t)
+            apply_capacity(t)
 
         out = [served[r.rid] for r in requests]
         finished = [s.finished_s for s in out if math.isfinite(s.finished_s)]
         self.last_run = ServerStats(
             n_queries=len(out),
-            n_finished=sum(1 for s in out if s.status != "shed"
+            n_finished=sum(1 for s in out
+                           if s.status not in REJECTED_STATUSES
                            and math.isfinite(s.finished_s)),
             n_micro_batches=n_batches,
             n_joined_running=n_joined_running,
             n_shed=n_shed, n_degraded=n_degraded,
+            n_rate_limited=n_rate_limited,
             rounds=self.session.rounds_total - rounds0,
             makespan_s=(max(finished) - first_arrival) if finished else 0.0,
             wall_time_s=time.perf_counter() - wall0,
@@ -396,54 +557,86 @@ class OptimizerServer:
                           for st in sched.states()
                           if st.slots_granted - slots0.get(st.name, 0)},
             flush_windows=flush_windows,
-            tune_windows=tune_windows)
+            tune_windows=tune_windows,
+            flush_caps=flush_caps)
         return out
 
     # -- reporting -----------------------------------------------------------
     def _goodput(self, sub: Sequence[ServedQuery]) -> float:
         """Fraction of requests finishing inside their tenant's budget.
 
-        Shed requests count against goodput (they never finish); the
-        denominator is *all* requests, so goodput + shed rate + late rate
-        partition the stream.
+        Rejected requests (shed or rate-limited) count against goodput —
+        they never produced a plan; the denominator is *all* requests, so
+        goodput + rejection rate + late rate partition the stream.
         """
         if not sub:
             return math.nan
         ok = sum(1 for s in sub
-                 if s.status != "shed" and math.isfinite(s.finished_s)
+                 if s.status not in REJECTED_STATUSES
+                 and math.isfinite(s.finished_s)
                  and s.plan_latency_s
                  <= self.scheduler.state(s.tenant).budget_s)
         return ok / len(sub)
 
-    def latency_report(self, served: Sequence[ServedQuery]) -> dict:
+    @staticmethod
+    def _counts(sub: Sequence[ServedQuery]) -> dict:
+        """Status counts + rates over one sample of served queries."""
+        n_shed = sum(1 for s in sub if s.status == "shed")
+        n_deg = sum(1 for s in sub if s.status == "degraded")
+        n_rl = sum(1 for s in sub if s.status == "rate_limited")
+        n = len(sub)
+        return {
+            "n_shed": n_shed,
+            "n_degraded": n_deg,
+            "n_rate_limited": n_rl,
+            "shed_rate": n_shed / n if n else math.nan,
+            "degrade_rate": n_deg / n if n else math.nan,
+            "rate_limited_rate": n_rl / n if n else math.nan,
+        }
+
+    def latency_report(self, served: Sequence[ServedQuery], *,
+                       window_s: Optional[float] = None) -> dict:
         """p50/p99/max of the two latency metrics plus throughput.
 
         Latency percentiles aggregate over *finished* queries only
-        (``status != "shed"``): one rejected request must not NaN-poison
-        the whole report.  Shed/degrade are reported as first-class
-        counts and rates alongside, plus goodput — the fraction of all
-        requests that finished within their tenant's budget.
+        (status not shed/rate-limited): one rejected request must not
+        NaN-poison the whole report.  Shed/degrade/rate-limited are
+        reported as first-class counts and rates alongside, plus goodput
+        — the fraction of all requests that finished within their
+        tenant's budget.
+
+        Every count and rate derives from the ``served`` argument (the
+        sample under report), never from run-level state, so a report
+        over a slice — one tenant, one phase of a nonstationary stream —
+        is internally consistent.  (Run-level fields — micro-batches,
+        rounds, makespan, qps — are explicitly about the *last run* and
+        keep coming from :attr:`last_run`.)
 
         With multi-tenant traffic the report adds a per-tenant breakdown
         (including each tenant's SLO class and shed/degrade counts) and
         the Jain fairness index over per-tenant p99 plan latency of
         finished queries (1.0 = perfectly even tails across tenants;
         tenants with nothing finished are excluded).
+
+        ``window_s`` adds a ``windows`` section: the stream is bucketed
+        by *arrival* time into consecutive windows of that width and
+        p50/p99, goodput, and shed/degrade/rate-limited rates are
+        reported per window — stream-wide aggregates mask phase behavior
+        under nonstationary load (a flash crowd's recovery is invisible
+        in one pooled p99).
         """
-        fin = [s for s in served
-               if s.status != "shed" and math.isfinite(s.finished_s)]
+        def _fin(sub):
+            return [s for s in sub if s.status not in REJECTED_STATUSES
+                    and math.isfinite(s.finished_s)]
+
+        fin = _fin(served)
         plan = np.array([s.plan_latency_s for s in fin], np.float64)
         solve = np.array([s.solve_latency_s for s in fin], np.float64)
-        n_shed = sum(1 for s in served if s.status == "shed")
-        n_degraded = sum(1 for s in served if s.status == "degraded")
         st = self.last_run
         rep = {
-            "n_queries": st.n_queries,
+            "n_queries": len(served),
             "n_finished": len(fin),
-            "n_shed": n_shed,
-            "n_degraded": n_degraded,
-            "shed_rate": n_shed / len(served) if served else math.nan,
-            "degrade_rate": n_degraded / len(served) if served else math.nan,
+            **self._counts(served),
             "goodput": self._goodput(served),
             "n_micro_batches": st.n_micro_batches,
             "n_joined_running": st.n_joined_running,
@@ -458,20 +651,14 @@ class OptimizerServer:
             per = {}
             for name in names:
                 sub = [s for s in served if s.tenant == name]
-                sub_fin = [s for s in sub if s.status != "shed"
-                           and math.isfinite(s.finished_s)]
+                sub_fin = _fin(sub)
                 ts = self.scheduler.state(name)
-                shed = sum(1 for s in sub if s.status == "shed")
-                degr = sum(1 for s in sub if s.status == "degraded")
                 per[name] = {
                     "n_queries": len(sub),
                     "n_finished": len(sub_fin),
                     "slo": ts.slo,
                     "budget_s": ts.budget_s,
-                    "n_shed": shed,
-                    "n_degraded": degr,
-                    "shed_rate": shed / len(sub),
-                    "degrade_rate": degr / len(sub),
+                    **self._counts(sub),
                     "goodput": self._goodput(sub),
                     "batch_slots": st.tenant_slots.get(name, 0),
                     "solve_latency_s": _pcts(np.array(
@@ -482,6 +669,30 @@ class OptimizerServer:
             rep["tenants"] = per
             rep["fairness_jain"] = jain_index(
                 [per[n]["plan_latency_s"]["p99"] for n in names])
+        if window_s is not None and served:
+            if window_s <= 0:
+                raise ValueError(f"window_s must be positive, got "
+                                 f"{window_s}")
+            t0 = min(s.arrival_s for s in served)
+            t1 = max(s.arrival_s for s in served)
+            n_w = int(math.floor((t1 - t0) / window_s)) + 1
+            windows = []
+            for i in range(n_w):
+                lo = t0 + i * window_s
+                hi = lo + window_s
+                sub = [s for s in served if lo <= s.arrival_s < hi]
+                sub_fin = _fin(sub)
+                windows.append({
+                    "t0_s": lo,
+                    "t1_s": hi,
+                    "n_arrived": len(sub),
+                    "n_finished": len(sub_fin),
+                    **self._counts(sub),
+                    "goodput": self._goodput(sub),
+                    "plan_latency_s": _pcts(np.array(
+                        [s.plan_latency_s for s in sub_fin], np.float64)),
+                })
+            rep["windows"] = windows
         return rep
 
 

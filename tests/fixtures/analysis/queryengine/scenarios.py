@@ -1,0 +1,18 @@
+"""Known-bad scenario-engine module: every way a scenario build can stop
+being a pure function of its seeds.  Golden fixture for the determinism
+checker's ``("queryengine", "scenarios.py")`` scope — NOT importable code.
+"""
+import time
+
+import numpy as np
+
+
+def build_events(specs):
+    stamp = time.time()                      # DT001: wall-clock in a build
+    rng = np.random.default_rng()            # DT002: unseeded rng
+    jitter = np.random.uniform(0.0, 1.0)     # DT002: legacy global state
+    tenants = {s.name for s in specs}
+    out = []
+    for name in tenants:                     # DT003: set iteration order
+        out.append((name, stamp + jitter + rng.random()))
+    return out

@@ -506,3 +506,152 @@ def test_multi_tenant_stream_reproducible_and_independent():
     b = [r.query.qid for r in r1 if r.tenant == "b"]
     assert a != b
     assert all(isinstance(r, StreamRequest) for r in r1)
+
+
+# ---------------------------------------------------------------------------
+# Token-bucket properties (PR-8: per-tenant rate limiting at the door)
+# ---------------------------------------------------------------------------
+
+from repro.serve import ElasticController, ElasticPolicy, TokenBucket  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.floats(min_value=0.5, max_value=20.0))
+def test_bucket_burst_is_the_instantaneous_cap(burst, rate):
+    """A fresh bucket at a single instant admits exactly ``burst`` takes
+    — never more, regardless of rate."""
+    b = TokenBucket(rate_qps=rate, burst=float(burst))
+    admitted = sum(b.take(0.0) for _ in range(burst + 5))
+    assert admitted == burst
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(min_value=0.5, max_value=8.0),
+       st.integers(1, 6))
+def test_bucket_conserves_tokens(seed, rate, burst):
+    """Over any arrival pattern, admissions never exceed the refill
+    budget: ``admitted <= burst + elapsed * rate`` at every prefix."""
+    rng = np.random.default_rng(seed)
+    b = TokenBucket(rate_qps=rate, burst=float(burst))
+    t, admitted = 0.0, 0
+    for _ in range(60):
+        t += float(rng.exponential(0.3))
+        admitted += b.take(t)
+        assert admitted <= burst + t * rate + 1e-9
+        assert 0.0 <= b.tokens <= burst
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(min_value=0.5, max_value=8.0))
+def test_bucket_no_starvation_after_idle(seed, rate):
+    """However drained, one full refill interval (``1/rate``) always buys
+    the next take — a tenant that backs off is never locked out."""
+    rng = np.random.default_rng(seed)
+    b = TokenBucket(rate_qps=rate, burst=2.0)
+    t = 0.0
+    for _ in range(20):
+        t += float(rng.exponential(0.05))
+        b.take(t)          # hammer the bucket (mostly rejected)
+    t += 1.0 / rate + 1e-9
+    assert b.take(t)
+
+
+def test_bucket_ignores_clock_regressions():
+    """An out-of-order arrival must not refill (monotone-clock guard) —
+    otherwise replay order could mint tokens."""
+    b = TokenBucket(rate_qps=1.0, burst=1.0)
+    assert b.take(10.0)
+    assert not b.take(10.5)
+    assert not b.take(0.0)     # regression: no refill, no admit
+    assert not b.take(10.6)    # and no token appeared meanwhile
+    assert b.take(11.5)        # a full second after the last refill point
+
+
+def test_bucket_validation():
+    with pytest.raises(ValueError, match="rate_qps"):
+        TokenBucket(rate_qps=0.0, burst=1.0)
+    with pytest.raises(ValueError, match="burst"):
+        TokenBucket(rate_qps=1.0, burst=0.0)
+
+
+def test_admit_arrival_routes_and_counts():
+    sched = TenantScheduler([TenantSpec(name="rl", rate_limit_qps=1.0,
+                                        rate_limit_burst=1.0),
+                             TenantSpec(name="free")])
+    assert sched.admit_arrival("rl", "a", 0.0)
+    assert not sched.admit_arrival("rl", "b", 0.1)
+    assert sched.admit_arrival("rl", "c", 1.2)
+    for i in range(5):       # no bucket → always admitted
+        assert sched.admit_arrival("free", i, 0.0)
+    rl, free = sched.state("rl"), sched.state("free")
+    assert (rl.n_enqueued, rl.n_rate_limited) == (2, 1)
+    assert (free.n_enqueued, free.n_rate_limited) == (5, 0)
+    picked = sched.compose(0.0, cap=8) + sched.compose(0.0, cap=8)
+    # Only admitted items reach composition; per-tenant FIFO is preserved.
+    assert [it for name, it, _ in picked if name == "rl"] == ["a", "c"]
+    assert [it for name, it, _ in picked if name == "free"] == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# Elastic-controller properties (PR-8: capacity follows the forecast)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(4, 32),
+       st.floats(min_value=0.05, max_value=2.0))
+def test_elastic_monotone_in_forecast(seed, min_b, max_b, target):
+    """The controller contract: a *higher* queue-delay forecast never
+    lowers the batch cap, never raises headroom, and never shortens the
+    degrade lead — so pressure only ever moves the knobs toward relief."""
+    rng = np.random.default_rng(seed)
+    pol = ElasticPolicy(min_batch=min_b, max_batch=max_b,
+                        target_delay_s=target)
+    base_cap, budget, reserve = 4, 1.0, 0.05
+    forecasts = np.sort(rng.uniform(0.0, 5.0 * target, size=12))
+    caps, heads, leads = [], [], []
+    for f in forecasts:
+        c = ElasticController(pol)
+        c.forecast_s = float(f)
+        caps.append(c.batch_cap(base_cap))
+        heads.append(c.headroom_s(budget, reserve, base_cap))
+        leads.append(c.degrade_lead_s(budget, reserve, base_cap))
+    assert all(min_b <= c <= max_b for c in caps)
+    assert all(b >= a for a, b in zip(caps, caps[1:]))
+    assert all(b <= a + 1e-12 for a, b in zip(heads, heads[1:]))
+    assert all(b >= a - 1e-12 for a, b in zip(leads, leads[1:]))
+    assert all(0.0 <= l <= budget for l in leads)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(min_value=0.05, max_value=1.0))
+def test_elastic_forecast_is_the_ewma_of_flush_delays(seed, alpha):
+    rng = np.random.default_rng(seed)
+    ctl = ElasticController(ElasticPolicy(ewma=alpha))
+    ref = 0.0
+    for d in rng.uniform(0.0, 2.0, size=10):
+        ctl.note_flush(float(d))
+        ref = (1 - alpha) * ref + alpha * float(d)
+        assert ctl.forecast_s == pytest.approx(ref)
+    assert ctl.n_windows == 10
+    ctl.note_flush(-5.0)       # negative delay is clamped, not absorbed
+    assert ctl.forecast_s >= 0.0
+
+
+def test_elastic_no_pressure_means_base_cap():
+    ctl = ElasticController(ElasticPolicy(min_batch=1, max_batch=32))
+    assert ctl.forecast_s == 0.0
+    for base in (1, 4, 32):
+        assert ctl.batch_cap(base) == base
+    assert ctl.degrade_lead_s(1.0, 0.05, 4) == 0.0
+
+
+def test_elastic_ceiling_never_clamps_the_provisioned_base():
+    """max_batch bounds the *scaling*, not the deployment: a capacity
+    event raising the base cap above the elastic ceiling passes through
+    unclamped (elasticity adds capacity, never subtracts it)."""
+    ctl = ElasticController(ElasticPolicy(min_batch=1, max_batch=4,
+                                          target_delay_s=0.1))
+    assert ctl.batch_cap(8) == 8                 # base above ceiling
+    ctl.forecast_s = 10.0                        # saturated pressure
+    assert ctl.batch_cap(8) == 8                 # still the base, not 4
+    assert ctl.batch_cap(1) == 4                 # scaling capped at 4

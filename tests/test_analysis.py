@@ -43,6 +43,17 @@ def test_determinism_scope_gate():
         SourceFile(FIXTURES / "core" / "bad_trace.py")) == []
 
 
+def test_determinism_scenario_fixture_golden():
+    # The scenario engine is a single-module scope: a path-part sequence
+    # ending in a .py part pins exactly queryengine/scenarios.py.
+    path = FIXTURES / "queryengine" / "scenarios.py"
+    assert determinism.in_scope(str(path))
+    assert not determinism.in_scope(
+        str(path.with_name("workloads.py")))
+    assert _findings(path, determinism.check) == [
+        (11, "DT001"), (12, "DT002"), (13, "DT002"), (16, "DT003")]
+
+
 def test_cache_key_fixture_golden():
     assert _findings(FIXTURES / "bad_cache.py", cache_keys.check) == [
         (6, "CK001"), (12, "CK002"), (12, "CK002")]
