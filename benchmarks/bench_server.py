@@ -31,10 +31,19 @@ same batch — throughput ratio, bit-identity, the recompilation bound
 (compiled signatures ≤ shape buckets across a varying-batch sweep), and
 p99 solve latency under a model-backed 64 q/s arrival stream.
 
+``run_fleet`` (``--fleet``) is the PR-9 multi-worker scenario: the same
+overload-class tenant mix served by an ``OptimizerFleet`` at worker
+counts ``--workers N...`` under a calibrated, contention-scaled
+``ServiceTimeModel`` — aggregate qps and strict-tenant p99 vs N, cache
+hit rates by routing policy (affinity vs random vs single), and
+per-tenant bit-identity of survivors with the offline pipeline at every
+(worker count, policy).
+
 Run:  PYTHONPATH=src python benchmarks/bench_server.py
       PYTHONPATH=src python benchmarks/bench_server.py --smoke   # CI
       PYTHONPATH=src python benchmarks/bench_server.py --overload
       PYTHONPATH=src python benchmarks/bench_server.py --smoke --model-solve
+      PYTHONPATH=src python benchmarks/bench_server.py --fleet --workers 1 2 4
 """
 from __future__ import annotations
 
@@ -51,9 +60,9 @@ from repro.core.moo.hmooc import HMOOCConfig
 from repro.queryengine.scenarios import scenario_matrix
 from repro.queryengine.workloads import (ArrivalModel, TenantSpec,
                                          multi_tenant_stream, serving_stream)
-from repro.serve import (CandidatePoolCache, ElasticPolicy, OptimizerServer,
-                         RuntimeSession, ServerConfig, ServiceTimeModel,
-                         TuningService)
+from repro.serve import (CandidatePoolCache, ElasticPolicy, OptimizerFleet,
+                         OptimizerServer, RuntimeSession, ServerConfig,
+                         ServiceTimeModel, TuningService)
 
 try:
     from .common import save_bench
@@ -721,6 +730,151 @@ def run_scenarios(bench: str = "tpch", n_per_tenant: int = 24,
     }
 
 
+# Modeled co-location contention for the fleet scenario: replicas share
+# the host, so each one's optimizer work slows as the fleet widens.  A
+# mild sublinear curve (8 replicas cost ~1.3x per solve) — the scaling
+# headline must survive honest contention, not assume a free lunch.
+FLEET_WORKER_SCALE = ((1, 1.0), (4, 1.15), (8, 1.3))
+
+
+def _fleet_survivors_identical(served, specs, cfg: HMOOCConfig) -> bool:
+    """Per-tenant golden check: full-quality survivors bit-match the
+    offline pipeline solved under that tenant's weights."""
+    for spec in specs:
+        sub = [s for s in served
+               if s.tenant == spec.name and s.status == "served"]
+        if not sub:
+            continue
+        queries = [s.request.query for s in sub]
+        cts = TuningService(cfg=cfg).tune_batch(queries, spec.weights)
+        ref = RuntimeSession(weights=spec.weights).run_batch(queries, cts)
+        if not _identical(sub, ref):
+            return False
+    return True
+
+
+def run_fleet(bench: str = "tpch", n: int = 96, workers=(1, 2, 4),
+              max_batch: int = 8, budget_s: float = 1.0, seed: int = 0,
+              cfg: Optional[HMOOCConfig] = None, check: bool = True,
+              load_factor: float = 2.0, calib_n: int = 24,
+              steal_factor: float = 1.0) -> dict:
+    """Multi-worker fleet scaling: qps + strict p99 vs N, hit rate by policy.
+
+    The overload tenant mix (one tenant per SLO class) arrives at
+    ``load_factor ×`` the measured single-worker capacity — a load one
+    worker genuinely cannot absorb — and is served by fresh
+    ``OptimizerFleet`` instances at each worker count in ``workers``
+    under affinity and random routing (plus the ``single`` policy
+    baseline, which pins everything to worker 0 at the widest fleet).
+    All serves charge one :class:`ServiceTimeModel` calibrated from warm
+    measured flush windows and re-priced per fleet width by the modeled
+    co-location contention curve (``FLEET_WORKER_SCALE``), so every
+    (worker count, policy) outcome is deterministic given the
+    calibration.  Work stealing is enabled at ``steal_factor × budget``:
+    when the owning worker's backlog forecast exceeds that, the request
+    goes to the least-loaded worker instead.
+
+    Claims reported per (N, policy): aggregate qps (should scale with N
+    until arrivals bound it), strict-tenant p99 and shed rate (shedding
+    should collapse as width absorbs the overload), response-cache hit
+    rate and effective-set warm rate (affinity should beat random — the
+    router exists to keep template traffic on its owning worker's
+    caches), steal count, and per-tenant bit-identity of survivors with
+    the offline pipeline (the golden invariant under any sharding).
+    """
+    cfg = cfg if cfg is not None else HMOOCConfig(seed=seed, **SERVING_CFG)
+    n_max = max(workers)
+    clock, _, _ = _calibrate_clock(
+        bench, cfg, sorted({1, 2, max_batch}), n=calib_n)
+    clock = dataclasses.replace(clock, worker_scale=FLEET_WORKER_SCALE)
+    # Single-worker capacity in the model's world: deterministically drain
+    # a representative mixed backlog (duplicates included) through a
+    # throwaway model-clocked server — same rationale as run_scenarios.
+    probe = [dataclasses.replace(r, rid=i, arrival_s=0.0)
+             for i, r in enumerate(serving_stream(
+                 bench, n, seed=seed + 17,
+                 arrivals=ArrivalModel(kind="fixed", rate_qps=1e6)))]
+    psrv = OptimizerServer(
+        config=ServerConfig(max_batch=max_batch, solve_budget_s=math.inf,
+                            clock=clock),
+        weights=WEIGHTS, cfg=cfg)
+    pserved = psrv.serve(probe)
+    pspan = max(s.finished_s for s in pserved)
+    capacity_qps = len(probe) / pspan if pspan > 0 else 1.0
+    rate = load_factor * capacity_qps
+    specs = _overload_specs(rate, budget_s=budget_s)
+    counts = [n // 3 + (1 if i < n % 3 else 0) for i in range(3)]
+    reqs = multi_tenant_stream(bench, specs, counts, seed=seed)
+    reserve_s = 2.0 / capacity_qps
+    server_cfg = ServerConfig(max_batch=max_batch, solve_budget_s=budget_s,
+                              solve_reserve_s=reserve_s, clock=clock)
+
+    def _one(n_workers: int, policy: str) -> dict:
+        fleet = OptimizerFleet(
+            n_workers=n_workers, config=server_cfg, weights=WEIGHTS,
+            cfg=cfg, tenants=specs, policy=policy,
+            steal_delay_s=steal_factor * budget_s, seed=seed)
+        served = fleet.serve(reqs)
+        rep = fleet.latency_report(served)
+        caches = fleet.cache_report()
+        strict = rep["tenants"]["strict"]
+        return {
+            "n_workers": n_workers,
+            "policy": policy,
+            "qps": rep["qps"],
+            "makespan_s": rep["makespan_s"],
+            "goodput": rep["goodput"],
+            "shed_rate": rep["shed_rate"],
+            "strict_p99_s": strict["plan_latency_s"]["p99"],
+            "strict_shed_rate": strict["shed_rate"],
+            "n_stolen": rep["n_stolen"],
+            "worker_counts": rep["worker_counts"],
+            "response_hit_rate": caches["response"]["hit_rate"],
+            "eset_warm_rate": caches["effective_set"]["warm_rate"],
+            "survivors_identical":
+                _fleet_survivors_identical(served, specs, cfg)
+                if check else None,
+        }
+
+    curve = {str(nw): {p: _one(nw, p) for p in ("affinity", "random")}
+             for nw in workers}
+    single = _one(n_max, "single")
+    qps1 = curve[str(workers[0])]["affinity"]["qps"]
+    scaling = {nw: curve[nw]["affinity"]["qps"] / qps1 for nw in curve}
+    wide = [nw for nw in curve if int(nw) > 1]
+    return {
+        "bench": bench,
+        "n_queries": len(reqs),
+        "workers": list(workers),
+        "capacity_qps": capacity_qps,
+        "aggregate_rate_qps": rate,
+        "load_factor": load_factor,
+        "max_batch": max_batch,
+        "budget_s": budget_s,
+        "steal_delay_s": steal_factor * budget_s,
+        "worker_scale": [list(p) for p in FLEET_WORKER_SCALE],
+        "clock_model": {"flush_points": [list(p) for p in
+                                         clock.flush_points],
+                        "round_s": clock.round_s, "cheap_s": clock.cheap_s},
+        "curve": curve,
+        "single_policy": single,
+        "qps_scaling_vs_1": scaling,
+        "qps_scales_with_workers":
+            scaling[str(n_max)] == max(scaling.values())
+            and scaling[str(n_max)] > 1.0 if len(workers) > 1 else True,
+        "affinity_hit_rate_ge_random": all(
+            curve[nw]["affinity"]["eset_warm_rate"]
+            >= curve[nw]["random"]["eset_warm_rate"] - 1e-12
+            and curve[nw]["affinity"]["response_hit_rate"]
+            >= curve[nw]["random"]["response_hit_rate"] - 1e-12
+            for nw in wide),
+        "survivors_identical_all": all(
+            v[p]["survivors_identical"] is not False
+            for v in curve.values() for p in v) and
+            single["survivors_identical"] is not False,
+    }
+
+
 def _train_bench_model(bench: str = "tpch", seed: int = 0, steps: int = 60,
                        n_queries: int = 8, n_conf: int = 6):
     """Briefly trained default-architecture subQ PerfModel.
@@ -912,6 +1066,12 @@ def main():
                     help="run the model-backed jitted-solve scenario only "
                          "(batched vs legacy throughput, bit-identity, "
                          "recompilation bound, 64 q/s stream)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the multi-worker fleet scenario (qps + strict "
+                         "p99 vs worker count, cache hit rate by routing "
+                         "policy, per-tenant bit-identity)")
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 2, 4],
+                    help="fleet worker counts to sweep (with --fleet)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI; checks streaming-path parity "
                          "and the solve budget, skips artifact write")
@@ -969,6 +1129,27 @@ def main():
             print(f"model-solve smoke ok "
                   f"({res['speedup_batched_vs_legacy']:.2f}x batched vs "
                   f"legacy at batch {res['batch']})")
+            return
+        if args.fleet:
+            res = run_fleet(args.bench, n=18,
+                            workers=tuple(args.workers[:2]) or (1, 2),
+                            max_batch=4, budget_s=budget, seed=args.seed,
+                            cfg=cfg, calib_n=12)
+            print(json.dumps(res, indent=2))
+            if not res["survivors_identical_all"]:
+                raise SystemExit(
+                    "fleet sharding perturbed surviving queries' outputs "
+                    "vs the offline per-tenant pipeline")
+            if not res["qps_scales_with_workers"]:
+                raise SystemExit(
+                    f"aggregate qps failed to scale with worker count: "
+                    f"{res['qps_scaling_vs_1']}")
+            if not res["affinity_hit_rate_ge_random"]:
+                raise SystemExit(
+                    "affinity routing lost to random routing on cache hit "
+                    "rate — the template-affinity ring is not keeping "
+                    "templates on their owning workers")
+            print("fleet smoke ok")
             return
         if args.overload:
             res = run_overload(args.bench, n=18,
@@ -1063,6 +1244,27 @@ def main():
             print(f"wrote {p}")
         return
 
+    if args.fleet:
+        res = run_fleet(args.bench, n=args.n, workers=tuple(args.workers),
+                        max_batch=args.max_batch, budget_s=args.budget_s,
+                        seed=args.seed)
+        print(json.dumps(res, indent=2))
+        n_max = str(max(args.workers))
+        top = res["curve"][n_max]["affinity"]
+        print(f"\nfleet (load {res['load_factor']:.1f}x capacity "
+              f"{res['capacity_qps']:.1f} q/s): qps scaling vs 1 worker "
+              f"{res['qps_scaling_vs_1']} | affinity@{n_max}: "
+              f"{top['qps']:.1f} q/s, strict p99 "
+              f"{top['strict_p99_s'] * 1e3:.0f} ms, warm rate "
+              f"{top['eset_warm_rate']:.2f} vs random "
+              f"{res['curve'][n_max]['random']['eset_warm_rate']:.2f} | "
+              f"affinity >= random hit rate: "
+              f"{res['affinity_hit_rate_ge_random']} | survivors "
+              f"identical: {res['survivors_identical_all']}")
+        for p in save_bench("server_fleet", res):
+            print(f"wrote {p}")
+        return
+
     if args.overload:
         res = run_overload(args.bench, n=args.n,
                            overload_factor=args.overload_factor,
@@ -1095,6 +1297,9 @@ def main():
         args.bench, seed=args.seed, budget_s=args.budget_s,
         max_batch=args.max_batch)
     res["scenarios"] = run_scenarios(args.bench, seed=args.seed)
+    res["fleet_scaling"] = run_fleet(
+        args.bench, n=args.n, workers=tuple(args.workers),
+        max_batch=args.max_batch, budget_s=args.budget_s, seed=args.seed)
     print(json.dumps(res, indent=2))
     s, b = res["server"], res["batch32_baseline"]
     print(f"\nserver: {s['qps']:.1f} q/s, plan p99 "
@@ -1135,6 +1340,11 @@ def main():
           f"{sn['flash_crowd_elastic_beats_static']}, strict p99 no "
           f"worse: {sn['flash_crowd_strict_p99_no_worse']}) | replay "
           f"identical: {sn['replay_identical_all']}")
+    fl = res["fleet_scaling"]
+    print(f"fleet: qps scaling vs 1 worker {fl['qps_scaling_vs_1']} | "
+          f"affinity >= random hit rate: "
+          f"{fl['affinity_hit_rate_ge_random']} | survivors identical: "
+          f"{fl['survivors_identical_all']}")
     for p in save_bench("server", res, headline=True):
         print(f"wrote {p}")
 

@@ -21,6 +21,7 @@ Benchmarks → paper artifacts:
   server_overload   (ours)       overload shedding: SLO classes past capacity
   server_model_solve (ours)      jitted model-backed solve vs legacy path
   server_scenarios  (ours)       nonstationary scenarios: elastic vs static
+  server_fleet      (ours)       multi-worker fleet qps scaling + routing
   roofline          (ours)       per-cell dry-run roofline table
   cluster_autotune  (ours)       HMOOC on the JAX cluster itself
   kernels           (ours)       Pallas kernel microbenches
@@ -109,6 +110,8 @@ def main() -> None:
         # pressure regime the elastic-vs-static comparison is sized for.
         "server_scenarios": lambda: [bench_server.run_scenarios(b)
                                      for b in benches],
+        "server_fleet": lambda: [bench_server.run_fleet(
+            b, n=96 if args.full else 48) for b in benches],
         "roofline": bench_roofline.run_roofline,
         "cluster_autotune": bench_cluster.run_cluster_autotune,
         "kernels": bench_cluster.run_kernels,

@@ -54,6 +54,10 @@ KEY_BUILDERS: Dict[str, Set[str]] = {
     # model fingerprint)
     "_response_key": {"tenant", "qid", "query_fingerprint", "w", "cfg",
                       "cost", "_model_fp"},
+    # Fleet router: the template-affinity dims of the cache fingerprint
+    # (cfg/cost/model are fleet-constant and must NOT differentiate
+    # workers; benchmark+template decide cache ownership).
+    "route_key": {"benchmark", "template"},
 }
 # Method-scoped builders: (class, method, key variable) -> required tokens.
 KEY_METHOD_BUILDERS: Dict[Tuple[str, str], Set[str]] = {
@@ -75,7 +79,10 @@ CONTEXT_DIMS: Dict[str, Sequence[str]] = {
 _EXACT_DIMS = {"w": "weights"}
 
 # Attribute / name fragments that identify a registered cache object.
-_CACHE_ATTRS = ("cache", "_results", "_pools", "_entries", "_d")
+# ``_blobs`` is the fleet CacheStore's published-snapshot map: its store
+# sites are audited like any serving cache (the key must carry every
+# context dimension the publishing function reads).
+_CACHE_ATTRS = ("cache", "_results", "_pools", "_entries", "_d", "_blobs")
 
 
 def _dotted(node: ast.AST) -> Optional[str]:
@@ -124,7 +131,7 @@ def _is_cache_store(node: ast.AST) -> Optional[Tuple[ast.AST, int]]:
         tgt = node.targets[0]
         base = _dotted(tgt.value) or ""
         leaf = base.rsplit(".", 1)[-1]
-        if leaf in ("_entries", "_pools", "_d"):
+        if leaf in ("_entries", "_pools", "_d", "_blobs"):
             return tgt.slice, node.lineno
     return None
 

@@ -29,10 +29,22 @@ Streaming (both halves unified):
   autoscale the batch cap and arm preemptive degradation from a
   queue-delay forecast; :class:`TokenBucket` rate-limits per tenant
   ahead of the waiting room.
+
+Fleet (multi-worker):
+
+* :class:`OptimizerFleet` — N server replicas behind a consistent-hash
+  template-affinity router (:class:`FleetRouter`/:class:`HashRing`) with
+  a work-stealing fallback; per-tenant outputs stay bit-identical to the
+  offline pipeline under any worker count and routing policy.
+* :class:`CacheStore` — process-external snapshot store the serving
+  caches ``snapshot()``/``restore()`` through (content-fingerprinted
+  entries only), carrying cache warmth across workers and processes.
 """
 from .admission import (Admit, ElasticController, ElasticPolicy,
                         TenantScheduler, TenantState, TokenBucket)
 from .cache import CandidatePoolCache, EffectiveSetCache
+from .fleet import (CacheStore, FleetRouter, FleetStats, HashRing,
+                    OptimizerFleet, ROUTING_POLICIES, route_key)
 from .runtime import RuntimeSession, RuntimeSessionStats
 from .server import (REJECTED_STATUSES, OptimizerServer, ServedQuery,
                      ServerConfig, ServerStats, ServiceTimeModel,
@@ -44,4 +56,6 @@ __all__ = ["EffectiveSetCache", "TuningService", "tune_batch",
            "CandidatePoolCache", "OptimizerServer", "ServerConfig",
            "ServedQuery", "ServerStats", "TenantScheduler", "TenantState",
            "Admit", "jain_index", "ElasticPolicy", "ElasticController",
-           "TokenBucket", "ServiceTimeModel", "REJECTED_STATUSES"]
+           "TokenBucket", "ServiceTimeModel", "REJECTED_STATUSES",
+           "OptimizerFleet", "FleetStats", "FleetRouter", "HashRing",
+           "CacheStore", "route_key", "ROUTING_POLICIES"]

@@ -32,6 +32,7 @@ Entries are LRU-evicted above ``max_entries``.
 from __future__ import annotations
 
 import dataclasses
+import pickle
 import zlib
 from collections import OrderedDict
 from typing import Optional, Tuple
@@ -43,6 +44,33 @@ from ..queryengine.plan import Query
 
 __all__ = ["EffectiveSetCache", "CandidatePoolCache", "query_fingerprint",
            "template_key", "model_fingerprint"]
+
+SNAPSHOT_FORMAT = "repro-cache-snapshot"
+SNAPSHOT_VERSION = 1
+
+
+def pack_snapshot(kind: str, entries: list) -> bytes:
+    """Serialize one cache's snapshot-eligible entries to an opaque blob."""
+    return pickle.dumps(
+        {"format": SNAPSHOT_FORMAT, "version": SNAPSHOT_VERSION,
+         "kind": kind, "entries": entries},
+        protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def unpack_snapshot(blob: bytes, kind: str) -> list:
+    """Validate and decode a blob produced by :func:`pack_snapshot`."""
+    payload = pickle.loads(blob)
+    if not isinstance(payload, dict) \
+            or payload.get("format") != SNAPSHOT_FORMAT:
+        raise ValueError("blob is not a serving-cache snapshot")
+    if payload.get("version") != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"unsupported snapshot version {payload.get('version')!r}")
+    if payload.get("kind") != kind:
+        raise ValueError(
+            f"snapshot of kind {payload.get('kind')!r} cannot restore "
+            f"into a {kind!r} cache")
+    return payload["entries"]
 
 
 def model_fingerprint(model) -> Optional[object]:
@@ -123,7 +151,13 @@ class EffectiveSetCache:
         if entry.fingerprint == query_fingerprint(query):
             self.hits += 1
             return entry.eset
-        if self.reuse_banks_across_variants:
+        if self.reuse_banks_across_variants \
+                and entry.eset.opt_idx is not None \
+                and len(entry.eset.opt_idx[0]) == query.n_subqs:
+            # Cross-variant bank reuse is only shape-valid when the stored
+            # banks cover exactly this query's subQ count — the same guard
+            # peek() enforces.  A variant with a different plan shape falls
+            # through to a structure hit (candidates reused, banks rebuilt).
             self.approx_hits += 1
             return entry.eset
         self.structure_hits += 1
@@ -172,6 +206,36 @@ class EffectiveSetCache:
                 "peek_hits": self.peek_hits,
                 "peek_misses": self.peek_misses}
 
+    def snapshot(self) -> bytes:
+        """Opaque blob of this cache's process-external entries (LRU order).
+
+        **Snapshot contract:** only entries minted under a content-
+        fingerprinted model (or no model) are included.  Entries keyed by
+        the ``id()`` fallback — the ones holding a live-object pin — are
+        process-local by construction (the id is meaningless elsewhere and
+        the pinned object cannot travel) and are silently excluded; they
+        simply stay warm on the worker that built them.
+        """
+        items = [(k, e.eset, e.fingerprint)
+                 for k, e in self._entries.items() if e.model is None]
+        return pack_snapshot("eset", items)
+
+    def restore(self, blob: bytes) -> int:
+        """Merge a :meth:`snapshot` blob into this cache; returns the
+        number of entries inserted.  Existing entries win over snapshot
+        entries under the same key (both are exact artifacts for that key,
+        so preference only affects LRU age, never results); the merge
+        respects ``max_entries`` by evicting from the cold end."""
+        n = 0
+        for k, es, fp in unpack_snapshot(blob, "eset"):
+            if k in self._entries:
+                continue
+            self._entries[k] = _Entry(eset=es, fingerprint=fp)
+            n += 1
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+        return n
+
 
 class CandidatePoolCache:
     """Shared runtime candidate pools keyed by (seed, n_candidates, scope).
@@ -209,6 +273,12 @@ class CandidatePoolCache:
         if pools is None:
             self.misses += 1
             pools = sample_candidate_pools(seed, n_candidates)
+            # The cached arrays are handed out by reference to every later
+            # hit: freeze them so an in-place mutation by one caller raises
+            # instead of silently poisoning all other queries and tenants
+            # sharing the pool.
+            for a in pools:
+                a.setflags(write=False)
             self._pools[key] = pools
         else:
             self.hits += 1
@@ -220,3 +290,24 @@ class CandidatePoolCache:
     def stats(self) -> dict:
         return {"entries": len(self._pools), "hits": self.hits,
                 "misses": self.misses}
+
+    def snapshot(self) -> bytes:
+        """Opaque blob of every pool entry (pools are pure LHS draws from
+        their key — always content-addressed, nothing is excluded)."""
+        return pack_snapshot("pools", list(self._pools.items()))
+
+    def restore(self, blob: bytes) -> int:
+        """Merge a :meth:`snapshot` blob; returns entries inserted.
+        Restored arrays are re-frozen (see :meth:`get`); existing entries
+        win under the same key and ``max_entries`` is enforced."""
+        n = 0
+        for k, v in unpack_snapshot(blob, "pools"):
+            if k in self._pools:
+                continue
+            for a in v:
+                a.setflags(write=False)
+            self._pools[k] = v
+            n += 1
+        while len(self._pools) > self.max_entries:
+            self._pools.popitem(last=False)
+        return n

@@ -128,10 +128,23 @@ class ServiceTimeModel:
     into cheap ones under pressure) instead of flattening it into a
     size-only charge.  Calibrate all three from measured warm flush
     windows — see ``benchmarks/bench_server.py run_scenarios``.
+
+    Worker concurrency: a fleet co-locates ``n_workers`` replicas on the
+    shared host, so each replica's optimizer work runs slower than the
+    single-process calibration by a contention factor.  ``worker_scale``
+    is a ``((n_workers, multiplier), ...)`` knot table (same interpolation
+    rules as ``flush_points``; the default single knot ``((1, 1.0),)``
+    means no contention at any width) and every charged cost — flush,
+    round, cheap member — is scaled by the multiplier at ``n_workers``.
+    :meth:`with_workers` re-prices the *same* calibrated model for a
+    different replica count, so a fleet's per-worker admission timelines
+    stay a pure function of stream + config at every width.
     """
     flush_points: Tuple[Tuple[int, float], ...]
     round_s: float = 0.0
     cheap_s: float = 0.0
+    n_workers: int = 1
+    worker_scale: Tuple[Tuple[int, float], ...] = ((1, 1.0),)
 
     def __post_init__(self):
         pts = tuple(sorted((int(n), float(s)) for n, s in self.flush_points))
@@ -144,18 +157,46 @@ class ServiceTimeModel:
         bad = [s for _, s in pts] + [self.round_s, self.cheap_s]
         if any(not math.isfinite(s) or s < 0.0 for s in bad):
             raise ValueError(f"costs must be finite and >= 0, got {bad}")
+        object.__setattr__(self, "n_workers", int(self.n_workers))
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        ws = tuple(sorted((int(n), float(m)) for n, m in self.worker_scale))
+        object.__setattr__(self, "worker_scale", ws)
+        if not ws or ws[0][0] < 1 or len({n for n, _ in ws}) != len(ws):
+            raise ValueError(f"worker-count knots must be unique and >= 1, "
+                             f"got {ws}")
+        if any(not math.isfinite(m) or m <= 0.0 for _, m in ws):
+            raise ValueError(f"worker-scale multipliers must be finite and "
+                             f"> 0, got {ws}")
 
     def flush_s(self, n: int, n_cheap: int = 0) -> float:
         """Charged cost of flushing ``n`` queries, ``n_cheap`` of which
         skipped the full solver (cache hits / degraded paths)."""
         n_cheap = min(max(int(n_cheap), 0), int(n))
         full = int(n) - n_cheap
-        return self._interp(full) + n_cheap * self.cheap_s
+        return (self._interp(full)
+                + n_cheap * self.cheap_s) * self.worker_mult()
+
+    def round_cost_s(self) -> float:
+        """Charged cost of one fusion round at the current worker count."""
+        return self.round_s * self.worker_mult()
+
+    def worker_mult(self) -> float:
+        """Contention multiplier of ``worker_scale`` at ``n_workers``."""
+        return self._interp_pts(self.worker_scale, self.n_workers)
+
+    def with_workers(self, n: int) -> "ServiceTimeModel":
+        """The same calibrated model re-priced for ``n`` co-located
+        workers (idempotent: only ``n_workers`` changes)."""
+        return dataclasses.replace(self, n_workers=int(n))
 
     def _interp(self, n: int) -> float:
         if n <= 0:
             return 0.0
-        pts = self.flush_points
+        return self._interp_pts(self.flush_points, n)
+
+    @staticmethod
+    def _interp_pts(pts: Tuple[Tuple[int, float], ...], n: int) -> float:
         if len(pts) == 1:
             return pts[0][1]
         if n <= pts[0][0]:
@@ -214,6 +255,8 @@ class ServedQuery:
     joined_running: bool = False       # admitted into an already-live session
     ct: Optional[CompileTimeResult] = None
     result: Optional[AQEResult] = None
+    worker: Optional[int] = None       # fleet replica index that served it
+                                       # (None outside a fleet)
 
     @property
     def solve_latency_s(self) -> float:
@@ -237,7 +280,8 @@ class ServerStats:
     n_degraded: int = 0                # degrade-SLO cheap-path admissions
     n_rate_limited: int = 0            # token-bucket door rejections
     rounds: int = 0                    # fusion rounds over the run
-    makespan_s: float = 0.0            # last finish − first arrival (sim)
+    makespan_s: float = 0.0            # last *served* finish − first arrival
+                                       # (sim; rejections don't extend it)
     wall_time_s: float = 0.0           # real time spent in serve()
     tenant_slots: Dict[str, int] = dataclasses.field(default_factory=dict)
     # Per-flush (charged clock window, batch size): the exact amounts the
@@ -519,7 +563,7 @@ class OptimizerServer:
                 self.session.step_round()
                 done = self.session.retire_ready()
                 results = self.session.realize(done) if done else []
-                t += (cfgv.clock.round_s if cfgv.clock is not None
+                t += (cfgv.clock.round_cost_s() if cfgv.clock is not None
                       else time.perf_counter() - t0)
                 if done:
                     finish(done, results, t)
@@ -540,7 +584,13 @@ class OptimizerServer:
             apply_capacity(t)
 
         out = [served[r.rid] for r in requests]
-        finished = [s.finished_s for s in out if math.isfinite(s.finished_s)]
+        # Makespan spans *served* work only: a shed/rate-limited request's
+        # finished_s is a rejection timestamp, not service — counting it
+        # would stretch the makespan (and deflate qps) on tail-shed streams
+        # where the last event is a rejection, not a finish.
+        finished = [s.finished_s for s in out
+                    if s.status not in REJECTED_STATUSES
+                    and math.isfinite(s.finished_s)]
         self.last_run = ServerStats(
             n_queries=len(out),
             n_finished=sum(1 for s in out

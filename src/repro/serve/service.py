@@ -33,8 +33,8 @@ from ..core.tuning.compile_time import (CompileTimeResult,
 from ..core.tuning.objectives import StageObjectives, fused_stage_eval
 from ..queryengine.plan import Query
 from ..queryengine.simulator import CostModel, DEFAULT_COST
-from .cache import (EffectiveSetCache, model_fingerprint, query_fingerprint,
-                    template_key)
+from .cache import (EffectiveSetCache, model_fingerprint, pack_snapshot,
+                    query_fingerprint, template_key, unpack_snapshot)
 
 __all__ = ["TuningService", "tune_batch", "ResponseCache"]
 
@@ -114,6 +114,36 @@ class ResponseCache:
         return {"entries": len(self._d), "hits": self.hits,
                 "misses": self.misses,
                 "model_evictions": self.model_evictions}
+
+    def snapshot(self) -> bytes:
+        """Opaque blob of the process-external entries (LRU order).
+
+        **Snapshot contract:** response keys end with the model
+        fingerprint; an ``int`` there is the ``id()`` fallback for models
+        without a content fingerprint, meaningful only inside this
+        process.  Those entries are silently excluded — they stay warm
+        locally.  Content-fingerprinted (str) and model-less (None) keys
+        serialize, including the degrade-marked ``("degraded", ...)``
+        variants (their :class:`_CheapEntry` kind travels with them).
+        """
+        items = [(k, v) for k, v in self._d.items()
+                 if not isinstance(k[-1], int)]
+        return pack_snapshot("response", items)
+
+    def restore(self, blob: bytes) -> int:
+        """Merge a :meth:`snapshot` blob; returns entries inserted.
+        Existing entries win under the same key (both are the solver's
+        deterministic output for that key); ``max_entries`` is enforced
+        from the cold end."""
+        n = 0
+        for k, v in unpack_snapshot(blob, "response"):
+            if k in self._d:
+                continue
+            self._d[k] = v
+            n += 1
+        while len(self._d) > self.max_entries:
+            self._d.popitem(last=False)
+        return n
 
 
 @dataclasses.dataclass

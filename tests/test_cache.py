@@ -2,8 +2,11 @@
 
 Covers the three long-lived serving caches shared across micro-batches and
 admission epochs: :class:`EffectiveSetCache`, :class:`CandidatePoolCache`,
-and :class:`ResponseCache`.
+and :class:`ResponseCache` — including their snapshot/restore contracts
+(the fleet's process-external warm-start path).
 """
+import pickle
+
 import numpy as np
 import pytest
 
@@ -266,3 +269,180 @@ def test_tenants_arg_validated():
     q = make_query("tpch", 3, variant=1)
     with pytest.raises(ValueError, match="tenant ids"):
         svc.tune_batch([q], tenants=["a", "b"])
+
+
+# ---------------------------------------------------------------------------
+# Approx-hit shape guard (PR-9 bugfix)
+# ---------------------------------------------------------------------------
+
+def _query_with_other_shape(base):
+    """A different variant of ``base``'s template whose plan has a
+    different subQ count (the structure seed is not part of the template
+    key, so such pairs share a cache entry)."""
+    for seed in range(1, 64):
+        q = make_query(base.benchmark, base.template, variant=2, seed=seed)
+        if q.n_subqs != base.n_subqs:
+            return q
+    raise AssertionError("no differing-shape variant found")
+
+
+def test_approx_hit_requires_matching_subq_count():
+    """Cross-variant bank reuse is only shape-valid when the stored banks
+    cover exactly the incoming query's subQ count — the same guard peek()
+    enforces.  A shape-mismatched variant must fall back to a structure
+    hit (candidates reused, banks stripped), never hand out banks indexed
+    by another plan shape."""
+    base = make_query("tpch", 3, variant=1, seed=0)
+    other = _query_with_other_shape(base)
+    cache = EffectiveSetCache(reuse_banks_across_variants=True)
+    svc = TuningService(cfg=CFG, cache=cache, dedupe=False)
+    svc.tune_batch([base])                             # stores banks
+    got = cache.lookup(other, CFG, svc.model, svc.cost)
+    assert got is not None and got.opt_idx is None     # banks stripped
+    st = cache.stats()
+    assert st["structure_hits"] == 1 and st["approx_hits"] == 0
+    # Matching-shape variants still take the approximate path.
+    same_shape = make_query("tpch", 3, variant=2, seed=0)
+    assert same_shape.n_subqs == base.n_subqs
+    assert cache.lookup(same_shape, CFG, svc.model,
+                        svc.cost).opt_idx is not None
+    assert cache.stats()["approx_hits"] == 1
+    # And the shape-mismatched solve goes through cleanly end to end.
+    svc.tune_batch([other])
+    assert svc.last_batch.n_solved == 1
+
+
+def test_candidate_pool_entries_are_immutable():
+    """Cached pools are handed out by reference to every hit: an in-place
+    mutation by one caller must raise instead of silently poisoning every
+    other query and tenant sharing the draw (PR-9 bugfix)."""
+    cache = CandidatePoolCache()
+    pools = cache.get(0, 8)
+    for a in pools:
+        with pytest.raises(ValueError):
+            a[0] = 0.0
+    # The hit path returns the same frozen arrays.
+    again = cache.get(0, 8)
+    assert again is pools and cache.hits == 1
+    for a in again:
+        assert not a.flags.writeable
+    # Consumers that need to modify must copy; the copy is writable.
+    np.array(pools[0])[0] = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore (fleet warm-start contract)
+# ---------------------------------------------------------------------------
+
+def test_effective_set_cache_snapshot_restore_round_trip():
+    q1 = make_query("tpch", 1, variant=1)
+    q2 = make_query("tpch", 2, variant=1)
+    svc = TuningService(cfg=CFG, dedupe=False)
+    ref = svc.tune_batch([q1, q2])
+    blob = svc.cache.snapshot()
+    assert isinstance(blob, bytes)
+    fresh = EffectiveSetCache()
+    assert fresh.restore(blob) == 2 and len(fresh) == 2
+    assert fresh.restore(blob) == 0                    # merge is idempotent
+    # A service over the restored cache serves exact full hits,
+    # bit-identical to the origin's solves.
+    svc2 = TuningService(cfg=CFG, cache=fresh, dedupe=False)
+    got = svc2.tune_batch([q1, q2])
+    assert fresh.stats()["hits"] == 2 and fresh.stats()["misses"] == 0
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(g.front, r.front)
+        np.testing.assert_array_equal(g.theta_c, r.theta_c)
+        assert g.choice == r.choice
+    # max_entries is enforced from the cold end on restore.
+    small = EffectiveSetCache(max_entries=1)
+    assert small.restore(blob) == 2 and len(small) == 1
+
+
+def test_effective_set_snapshot_excludes_id_pinned_entries():
+    """Entries keyed by the id() fallback (models without a content
+    fingerprint) are process-local by construction and must not travel;
+    content-fingerprinted entries must."""
+    class _NoFp:
+        pass
+
+    class _Fp:
+        def fingerprint(self):
+            return ("fp", 1)
+
+    eset = build_candidates(4, 6, CFG)
+    cache = EffectiveSetCache()
+    cache.store(make_query("tpch", 0), CFG, eset, model=_NoFp())
+    cache.store(make_query("tpch", 1), CFG, eset, model=_Fp())
+    cache.store(make_query("tpch", 2), CFG, eset)      # no model: eligible
+    fresh = EffectiveSetCache()
+    assert fresh.restore(cache.snapshot()) == 2
+    # The fingerprinted entry is addressable from a *different* live
+    # object with the same content fingerprint.
+    assert fresh.lookup(make_query("tpch", 1), CFG, _Fp()) is not None
+    assert fresh.lookup(make_query("tpch", 0), CFG) is None
+
+
+def test_candidate_pool_cache_snapshot_restore_round_trip():
+    cache = CandidatePoolCache()
+    p0 = cache.get(0, 8)
+    cache.get(1, 8, scope="a")
+    fresh = CandidatePoolCache()
+    fresh.get(0, 8)                                    # existing entry wins
+    assert fresh.restore(cache.snapshot()) == 1 and len(fresh) == 2
+    hit = fresh.get(1, 8, scope="a")
+    assert fresh.hits == 1                             # served from restore
+    np.testing.assert_array_equal(hit[0], cache.get(1, 8, scope="a")[0])
+    # Restored arrays are re-frozen.
+    for a in hit:
+        with pytest.raises(ValueError):
+            a[0] = 0.0
+    np.testing.assert_array_equal(fresh.get(0, 8)[0], p0[0])
+
+
+def test_response_cache_snapshot_round_trip_serves_identically():
+    rc = ResponseCache()
+    svc = TuningService(cfg=CFG, response_cache=rc)
+    q = make_query("tpch", 5, variant=1)
+    ref = svc.tune_batch([q], (0.9, 0.1))[0]
+    fresh = ResponseCache()
+    assert fresh.restore(rc.snapshot()) == 1
+    svc2 = TuningService(cfg=CFG, response_cache=fresh)
+    got = svc2.tune_batch([q], (0.9, 0.1))[0]
+    assert fresh.hits == 1 and fresh.misses == 0       # served from restore
+    np.testing.assert_array_equal(got.front, ref.front)
+    np.testing.assert_array_equal(got.theta_c, ref.theta_c)
+    assert got.choice == ref.choice
+
+
+def test_response_cache_snapshot_excludes_id_fallback_keys():
+    """Response keys end with the model fingerprint; an int there is the
+    id() fallback, meaningful only inside this process, and must stay
+    home."""
+    rc = ResponseCache()
+    portable = ("t", "q1", 7, (0.9, 0.1), None, None, ("fp", 1))
+    pinned = ("t", "q2", 7, (0.9, 0.1), None, None, 140234567)
+    rc.put(portable, "portable")
+    rc.put(pinned, "pinned")
+    fresh = ResponseCache()
+    assert fresh.restore(rc.snapshot()) == 1
+    assert fresh.get(portable) == "portable"
+    assert fresh.get(pinned) is None
+
+
+def test_snapshot_blob_validation():
+    eset_blob = EffectiveSetCache().snapshot()
+    pools_blob = CandidatePoolCache().snapshot()
+    # Kind mismatch: a pools blob cannot restore into an eset cache.
+    with pytest.raises(ValueError, match="kind"):
+        EffectiveSetCache().restore(pools_blob)
+    with pytest.raises(ValueError, match="kind"):
+        CandidatePoolCache().restore(eset_blob)
+    with pytest.raises(ValueError, match="kind"):
+        ResponseCache().restore(eset_blob)
+    # Foreign and version-skewed blobs are rejected outright.
+    with pytest.raises(ValueError, match="not a serving-cache snapshot"):
+        EffectiveSetCache().restore(pickle.dumps({"format": "other"}))
+    bad_ver = pickle.dumps({"format": "repro-cache-snapshot", "version": 99,
+                            "kind": "eset", "entries": []})
+    with pytest.raises(ValueError, match="version"):
+        EffectiveSetCache().restore(bad_ver)

@@ -14,10 +14,10 @@ import pytest
 
 from repro.core.moo.hmooc import HMOOCConfig
 from repro.queryengine.workloads import (ArrivalModel, StreamRequest,
-                                         TenantSpec, multi_tenant_stream,
-                                         serving_stream)
+                                         TenantSpec, make_query,
+                                         multi_tenant_stream, serving_stream)
 from repro.serve import (OptimizerServer, RuntimeSession, ServerConfig,
-                         TuningService)
+                         ServiceTimeModel, TuningService)
 
 CFG = HMOOCConfig(n_c_init=16, n_clusters=4, n_p_pool=48, n_c_enrich=12,
                   max_bank=12, seed=3)
@@ -483,6 +483,65 @@ def test_latency_report_mixed_finished_and_shed():
     assert per["be"]["n_shed"] == 0
     assert math.isfinite(per["be"]["plan_latency_s"]["p99"])
     assert rep["goodput"] <= 0.5
+
+
+def test_makespan_and_qps_ignore_rejection_timestamps():
+    """A late rejection must not stretch the makespan (PR-9 bugfix): a
+    shed request's finished_s is a rejection timestamp, not service, so a
+    tail-shed stream whose last event is a rejection keeps the qps of the
+    work actually served."""
+    clock = ServiceTimeModel(flush_points=((1, 0.05), (8, 0.2)),
+                             round_s=0.005, cheap_s=0.001)
+    specs = [TenantSpec(name="strict", slo="strict", solve_budget_s=0.0),
+             TenantSpec(name="be")]
+    reqs = [StreamRequest(rid=i, query=make_query("tpch", i, variant=1),
+                          arrival_s=0.0, tenant="be") for i in range(4)]
+    reqs.append(StreamRequest(rid=4, query=make_query("tpch", 4, variant=1),
+                              arrival_s=1000.0, tenant="strict"))
+    srv = OptimizerServer(config=ServerConfig(max_batch=4, clock=clock),
+                          weights=WEIGHTS, cfg=CFG, tenants=specs)
+    served = srv.serve(reqs)
+    assert [s.status for s in served] == ["served"] * 4 + ["shed"]
+    assert served[-1].finished_s >= 1000.0             # rejection stamped
+    st = srv.last_run
+    assert st.n_finished == 4 and st.n_shed == 1
+    last_served = max(s.finished_s for s in served[:4])
+    assert st.makespan_s == pytest.approx(last_served)  # first arrival 0.0
+    assert st.makespan_s < 100.0                        # not 1000+
+    assert st.qps == pytest.approx(4 / st.makespan_s)
+    assert srv.latency_report(served)["qps"] == st.qps
+
+
+def test_service_time_model_worker_dimension():
+    """Fleet co-location contention: every charged cost scales by the
+    worker_scale multiplier at n_workers, and with_workers() re-prices
+    the same calibration without touching it."""
+    base = ServiceTimeModel(flush_points=((1, 0.1), (8, 0.4)), round_s=0.01,
+                            cheap_s=0.002, worker_scale=((1, 1.0), (4, 1.25)))
+    assert base.worker_mult() == pytest.approx(1.0)
+    assert base.with_workers(2).worker_mult() == pytest.approx(1.0 + 0.25 / 3)
+    four = base.with_workers(4)
+    assert four.worker_mult() == pytest.approx(1.25)
+    assert four.flush_s(1) == pytest.approx(base.flush_s(1) * 1.25)
+    assert four.flush_s(4, 2) == pytest.approx(base.flush_s(4, 2) * 1.25)
+    assert four.round_cost_s() == pytest.approx(base.round_s * 1.25)
+    assert four.flush_points == base.flush_points       # calibration intact
+    assert four.with_workers(1) == base                 # idempotent re-price
+    # The single-knot default means no contention at any width.
+    flat = ServiceTimeModel(flush_points=((1, 0.1),))
+    assert flat.with_workers(8).flush_s(1) == pytest.approx(flat.flush_s(1))
+
+
+def test_service_time_model_worker_validation():
+    with pytest.raises(ValueError, match="worker-count knots"):
+        ServiceTimeModel(flush_points=((1, 0.1),),
+                         worker_scale=((1, 1.0), (1, 2.0)))
+    with pytest.raises(ValueError, match="worker-count knots"):
+        ServiceTimeModel(flush_points=((1, 0.1),), worker_scale=((0, 1.0),))
+    with pytest.raises(ValueError, match="multipliers"):
+        ServiceTimeModel(flush_points=((1, 0.1),), worker_scale=((1, 0.0),))
+    with pytest.raises(ValueError, match="n_workers"):
+        ServiceTimeModel(flush_points=((1, 0.1),)).with_workers(0)
 
 
 def test_jain_index_ignores_nonfinite():
