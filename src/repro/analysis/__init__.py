@@ -1,23 +1,37 @@
 """``repro.analysis`` — invariant-checking static analysis for the repo.
 
-Four checkers over the source tree, each pinning a bug class every earlier
+Six checkers over the source tree, each pinning a bug class every earlier
 PR has hand-fixed at least once:
 
 * :mod:`.trace_hazards` (``TH*``) — traced-value branches, host syncs,
   import/first-call-frozen backend & env routing, unbucketed dispatch.
 * :mod:`.cache_keys` (``CK*``) — serving-cache key completeness against
-  the context dimensions the cached computations read.
+  the context dimensions the cached computations read, file-scoped and
+  interprocedurally through the call graph.
 * :mod:`.determinism` (``DT*``) — wall-clock, unseeded RNG and
   set-iteration-order leaks in transcript-order paths.
 * :mod:`.kernel_parity` (``KP*``) — every kernel package ships a ref,
   a registered parity test, and tie-tolerant f32 routing.
+* :mod:`.replay_purity` (``RP*``) — ambient process state (wall clock,
+  env, global RNG, ``id()``, module-global mutation) read anywhere
+  reachable from the serving entrypoints on the project call graph.
+* :mod:`.snapshot_safety` (``SN*``) — fleet snapshot blobs: pin filters
+  at pack sites, no ``id()`` flows into blobs, restores re-freeze arrays.
+
+The dataflow layer the project-scoped checkers share — per-module symbol
+tables, def-use chains, call graph + reachability — lives in
+:mod:`.core` (:class:`~.core.CallGraph`).
 
 Run ``python -m repro.analysis [--strict] [paths...]`` (default ``src``);
 suppress an intentional finding inline with
-``# repro: allow[RULE] written justification``.
+``# repro: allow[RULE] written justification``.  ``--rules`` prints the
+generated rules reference; ``--json`` emits machine-readable findings;
+``--select TH,CK`` scopes the active rule set.
 """
-from .core import (Finding, RunResult, SourceFile, RULES, render_report,
-                   run_files, run_paths)
+from .core import (CallGraph, Finding, RunResult, SourceFile, RULES,
+                   render_json, render_report, render_rules, run_files,
+                   run_paths)
 
-__all__ = ["Finding", "RunResult", "SourceFile", "RULES", "render_report",
-           "run_files", "run_paths"]
+__all__ = ["CallGraph", "Finding", "RunResult", "SourceFile", "RULES",
+           "render_json", "render_report", "render_rules", "run_files",
+           "run_paths"]

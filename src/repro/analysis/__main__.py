@@ -2,14 +2,15 @@
 
 Exit status 0 when every finding is suppressed (with a written
 justification under ``--strict``), 1 otherwise.  Prints each finding as
-``path:line: RULE message`` plus a per-rule summary table.
+``path:line: RULE message`` plus a per-rule summary table (``--json``
+for machine-readable output, ``--rules`` for the rules reference).
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-from .core import render_report, run_paths
+from .core import render_json, render_report, render_rules, run_paths
 
 
 def main(argv=None) -> int:
@@ -17,17 +18,36 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis",
         description="Invariant-checking static analysis "
                     "(trace hazards, cache keys, determinism, kernel "
-                    "parity).")
+                    "parity, replay purity, snapshot safety).")
     ap.add_argument("paths", nargs="*", default=["src"],
                     help="files or directories to scan (default: src)")
     ap.add_argument("--strict", action="store_true",
-                    help="suppressions must carry a written justification")
+                    help="suppressions must carry a written justification "
+                    "and must still silence something (SUP001/SUP002)")
     ap.add_argument("--tests", default=None,
                     help="parity-test file for the kernel registry "
                     "(default: auto-discover tests/test_kernels.py)")
+    ap.add_argument("--select", default=None, metavar="PREFIXES",
+                    help="comma-separated rule-id prefixes to activate "
+                    "(e.g. TH,CK,SUP); default: all rules")
+    ap.add_argument("--exclude", action="append", default=[],
+                    metavar="SUBSTR",
+                    help="skip files whose path contains this substring "
+                    "(repeatable; e.g. tests/fixtures)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON findings for CI "
+                    "annotation instead of the text report")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the generated rules reference and exit")
     args = ap.parse_args(argv)
-    result = run_paths(args.paths, strict=args.strict, tests_dir=args.tests)
-    print(render_report(result))
+    if args.rules:
+        print(render_rules())
+        return 0
+    select = ([p.strip() for p in args.select.split(",") if p.strip()]
+              if args.select else None)
+    result = run_paths(args.paths, strict=args.strict, tests_dir=args.tests,
+                       select=select, exclude=args.exclude)
+    print(render_json(result) if args.json else render_report(result))
     return 0 if result.ok else 1
 
 

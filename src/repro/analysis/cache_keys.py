@@ -18,8 +18,11 @@ Rules:
   context dimension (tenant / weights / gamma_mode / degraded / scope /
   seed / model) that does not flow into the key expression.  Key
   expressions are resolved through local assignments and same-module key
-  builders; a key passed in whole as a parameter is trusted (the caller's
-  store site is audited instead).
+  builders; a key passed in whole as a parameter is trusted locally and
+  the *callers* of the enclosing function are audited instead, through
+  the project call graph (``check_project``) — closing the old blind
+  spot where a helper stored under a caller-composed key and neither
+  side was checked.
 
 The context-dimension vocabulary is a name-pattern registry, not type
 inference: a dimension counts as *read* when an identifier matching it
@@ -32,9 +35,11 @@ from __future__ import annotations
 import ast
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from .core import Finding, SourceFile, register_rules
+from .core import (CallGraph, Finding, SourceFile, param_names,
+                   register_rules)
 
-__all__ = ["check", "RULES", "KEY_BUILDERS", "CONTEXT_DIMS"]
+__all__ = ["check", "check_project", "RULES", "KEY_BUILDERS",
+           "CONTEXT_DIMS"]
 
 RULES = {
     "CK001": "registered cache-key builder is missing a required dimension",
@@ -197,24 +202,30 @@ def _top_operands(expr: ast.AST) -> List[ast.AST]:
 
 
 def _key_closure(key: ast.AST, fn: ast.FunctionDef, index: _FnIndex,
-                 params: Set[str]) -> Tuple[Set[str], Set[str], bool]:
-    """(identifier closure, string literals, trusted-whole flag) of a key.
+                 params: Set[str]) -> Tuple[Set[str], Set[str],
+                                            Optional[str]]:
+    """(identifier closure, string literals, trusted param name) of a key.
 
-    Trusted-whole: the key — directly or through local assignments — is a
+    Trusted: the key — directly or through local assignments — is a
     parameter (or a tuple-concat including one): its composition is the
-    caller's responsibility, so this store site is exempt (the caller's
-    own store/builder is audited instead).
+    caller's responsibility, so the file-scoped pass exempts the store
+    site and ``check_project`` audits the call sites binding that
+    parameter instead.  The closure and literals of any *locally*
+    composed part (e.g. the ``("degraded",)`` prefix of
+    ``("degraded",) + exact_key``) are still collected — they count as
+    keyed when the callers are audited.
     """
     assigns = _assignments(fn)
     closure: Set[str] = set()
     literals: Set[str] = set()
+    trusted: Optional[str] = None
     frontier = [key]
     seen_names: Set[str] = set()
     while frontier:
         expr = frontier.pop()
         for op in _top_operands(expr):
             if isinstance(op, ast.Name) and op.id in params:
-                return set(), set(), True
+                trusted = op.id
         toks = _tokens(expr)
         closure |= toks
         for sub in ast.walk(expr):
@@ -229,7 +240,16 @@ def _key_closure(key: ast.AST, fn: ast.FunctionDef, index: _FnIndex,
                 continue
             seen_names.add(t)
             frontier.extend(assigns.get(t, []))
-    return closure, literals, False
+    return closure, literals, trusted
+
+
+def _literal_dims(literals: Set[str]) -> Set[str]:
+    """Dimensions encoded as string markers in the key (("degraded", ...))."""
+    out: Set[str] = set()
+    for dim, pats in CONTEXT_DIMS.items():
+        if any(p in l for l in literals for p in pats):
+            out.add(dim)
+    return out
 
 
 def _check_builder_fn(src: SourceFile, fn: ast.FunctionDef,
@@ -308,17 +328,120 @@ def check(src: SourceFile) -> List[Finding]:
         for key_expr, line in stores:
             closure, lits, trusted = _key_closure(key_expr, fn, index,
                                                   params)
-            if trusted:
-                continue
-            keyed = _dims_of(closure)
+            if trusted is not None:
+                continue       # caller-composed key: check_project audits it
             # String-literal markers in the key (e.g. ("degraded", ...))
             # count: the dimension is encoded even without a variable.
-            for dim, pats in CONTEXT_DIMS.items():
-                if any(p in l for l in lits for p in pats):
-                    keyed.add(dim)
+            keyed = _dims_of(closure) | _literal_dims(lits)
             for dim in sorted(fn_dims - keyed):
                 findings.append(Finding(
                     src.path, line, "CK002",
                     f"`{fn.name}` reads context dimension `{dim}` but the "
                     "stored cache key does not include it"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Interprocedural CK002: audit the callers of trusted-param store sites
+# ---------------------------------------------------------------------------
+
+def _bind_arg(fn: ast.AST, call: ast.Call,
+              pname: str) -> Optional[ast.AST]:
+    """The argument expression a call site binds to parameter ``pname``."""
+    for kw in call.keywords:
+        if kw.arg == pname:
+            return kw.value
+    names = [a.arg for a in fn.args.args]
+    skip = 1 if names and names[0] in ("self", "cls") \
+        and isinstance(call.func, ast.Attribute) else 0
+    try:
+        idx = names.index(pname) - skip
+    except ValueError:
+        return None
+    if 0 <= idx < len(call.args):
+        arg = call.args[idx]
+        if isinstance(arg, ast.Starred):
+            return None
+        return arg
+    return None
+
+
+_MAX_PROPAGATION_DEPTH = 3
+
+
+def check_project(srcs: Sequence[SourceFile],
+                  graph: CallGraph) -> List[Finding]:
+    """CK002 across function boundaries.
+
+    The file-scoped pass trusts a store whose key is a parameter.  This
+    pass picks those sites up: for every caller binding that parameter
+    (found through the call graph), the argument's identifier closure in
+    the *caller* must carry every context dimension read anywhere on the
+    store path (callee reads and caller reads both count); dimensions
+    already encoded locally at the store site — e.g. the ``("degraded",)``
+    literal prefix — count as keyed.  Call sites that are themselves
+    recognized cache stores (direct ``.put(key, v)``) are skipped: the
+    file-scoped pass already audited them.  When the caller's argument is
+    again a whole parameter, the audit recurses one level up
+    (depth-limited).
+    """
+    findings: List[Finding] = []
+    indexes: Dict[str, _FnIndex] = {}
+
+    def fn_index(src: SourceFile) -> _FnIndex:
+        if src.path not in indexes:
+            indexes[src.path] = _FnIndex(src.tree)
+        return indexes[src.path]
+
+    # (store-path fn qname, trusted param, keyed dims so far, dims read on
+    # the store path so far, depth)
+    work: List[Tuple[str, str, frozenset, frozenset, int]] = []
+    for qname, (src, fn) in graph.functions.items():
+        params = param_names(fn)
+        fn_dims = _dims_of(_tokens(fn))
+        for node in ast.walk(fn):
+            hit = _is_cache_store(node)
+            if hit is None:
+                continue
+            key_expr, _line = hit
+            closure, lits, trusted = _key_closure(key_expr, fn,
+                                                  fn_index(src), params)
+            if trusted is None:
+                continue
+            keyed = _dims_of(closure) | _literal_dims(lits)
+            work.append((qname, trusted, frozenset(keyed),
+                         frozenset(fn_dims), 0))
+    seen: Set[Tuple[str, str, frozenset, frozenset]] = set()
+    while work:
+        qname, pname, keyed0, required0, depth = work.pop()
+        state = (qname, pname, keyed0, required0)
+        if state in seen or depth > _MAX_PROPAGATION_DEPTH:
+            continue
+        seen.add(state)
+        _store_src, store_fn = graph.functions[qname]
+        for site in graph.call_sites(qname):
+            if _is_cache_store(site.node) is not None:
+                continue
+            arg = _bind_arg(store_fn, site.node, pname)
+            if arg is None:
+                continue
+            caller_src, caller_fn = graph.functions[site.caller]
+            cparams = param_names(caller_fn)
+            closure, lits, trusted = _key_closure(arg, caller_fn,
+                                                  fn_index(caller_src),
+                                                  cparams)
+            keyed = set(keyed0) | _dims_of(closure) | _literal_dims(lits)
+            required = set(required0) | _dims_of(_tokens(caller_fn))
+            if trusted is not None:
+                work.append((site.caller, trusted, frozenset(keyed),
+                             frozenset(required), depth + 1))
+                continue
+            callee = qname.rsplit(".", 1)[-1]
+            caller = site.caller.rsplit(".", 1)[-1]
+            for dim in sorted(required - keyed):
+                findings.append(Finding(
+                    caller_src.path, site.node.lineno, "CK002",
+                    f"`{caller}` passes `{callee}` a cache key that does "
+                    f"not include context dimension `{dim}` read on the "
+                    "store path"))
     return findings

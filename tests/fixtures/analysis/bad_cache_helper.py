@@ -1,0 +1,20 @@
+"""Known-bad fixture: unkeyed context read across a helper boundary."""
+
+
+class Store:
+    def __init__(self):
+        self._results = {}
+
+    def put_result(self, key, value):
+        self._results.put(key, value)
+
+
+class Service:
+    def __init__(self):
+        self.store = Store()
+
+    def answer(self, q, tenant):
+        key = (q.qid,)
+        value = solve(q, tenant)
+        self.store.put_result(key, value)
+        return value

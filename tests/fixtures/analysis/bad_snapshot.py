@@ -1,0 +1,26 @@
+"""Known-bad fixture: snapshot pack/restore safety violations."""
+
+
+class BadCache:
+    def __init__(self):
+        self._entries = {}
+
+    def snapshot(self):
+        items = [(k, v) for k, v in self._entries.items()]
+        return pack_snapshot("eset", items)
+
+    def snapshot_pinned(self):
+        items = [(id(v), v) for v in self._entries.values()
+                 if v.model is None]
+        return pack_snapshot("eset", items)
+
+    def restore(self, blob):
+        for k, es in unpack_snapshot(blob, "eset"):
+            self._entries[k] = es
+        return len(self._entries)
+
+    def restore_pools(self, blob):
+        for k, arrs in unpack_snapshot(blob, "pools"):
+            for a in arrs:
+                a.setflags(write=False)
+            self._entries[k] = arrs

@@ -1,0 +1,21 @@
+"""Known-bad fixture: impure reads reachable from the serving entrypoints."""
+import os
+import time
+
+from helpers import draw as lhs_draw
+import helpers as hp
+
+
+class OptimizerServer:
+    def serve(self, stream):
+        t0 = time.time()
+        region = os.environ.get("CLOUD_REGION", "?")
+        budget = os.environ.get("REPRO_SOLVE_BUDGET")
+        out = [lhs_draw(q) for q in stream]
+        hp.note(len(out))
+        return out, t0, region, budget
+
+
+def offline_report():
+    # Not reachable from the serving entrypoints: must not be flagged.
+    return time.time()

@@ -1,0 +1,15 @@
+"""Fixture: an allow on line one of a multi-line statement covers its
+continuation lines; a suppression silencing nothing is dead (SUP002)."""
+import time
+
+
+def measure():
+    t = (  # repro: allow[DT001] fixture: simulated-clock shim, span test
+        time.time()
+    )
+    return t
+
+
+def clean():
+    # repro: allow[DT002] fixture: nothing here draws randomness any more
+    return 0

@@ -4,15 +4,16 @@ Each fixture under tests/fixtures/analysis/ is a known-bad file whose
 exact (line, rule) findings are pinned here; the suite's gate contract is
 pinned by the strict zero-findings run over the real src/ tree.
 """
+import json
 import os
 import subprocess
 import sys
 from pathlib import Path
 
 from repro.analysis import run_paths
-from repro.analysis.core import SourceFile, run_files
+from repro.analysis.core import CallGraph, SourceFile, run_files
 from repro.analysis import (cache_keys, determinism, kernel_parity,
-                            trace_hazards)
+                            replay_purity, snapshot_safety, trace_hazards)
 
 REPO = Path(__file__).resolve().parents[1]
 FIXTURES = REPO / "tests" / "fixtures" / "analysis"
@@ -74,6 +75,119 @@ def test_kernel_registry_fixture_golden():
     assert got == [("badpkg", "KP001"), ("badpkg", "KP002")]
 
 
+def test_call_graph_cycles_methods_aliases():
+    a = SourceFile("proj/a.py", text="""\
+import b as helper
+from b import leaf as renamed
+
+
+class Engine:
+    def __init__(self):
+        self.sink = Sink()
+
+    def run(self, n):
+        if n:
+            return self.run(n - 1)
+        self.sink.flush()
+        return helper.step(n)
+
+
+class Sink:
+    def flush(self):
+        return renamed()
+""")
+    b = SourceFile("proj/b.py", text="""\
+def step(n):
+    return mutual(n)
+
+
+def mutual(n):
+    return step(n - 1)
+
+
+def leaf():
+    return 0
+
+
+def orphan():
+    return leaf()
+""")
+    graph = CallGraph([a, b])
+    assert graph.resolve("Engine.run") == ["proj.a.Engine.run"]
+    # a class-name entrypoint expands to every method of the class
+    assert set(graph.resolve("Engine")) == {
+        "proj.a.Engine.__init__", "proj.a.Engine.run"}
+    reach = graph.reachable_from(["Engine.run"])
+    # self-recursion and b's mutual-recursion cycle both terminate; the
+    # aliased module import (helper.step), aliased from-import (renamed
+    # -> b.leaf) and the typed self.sink receiver all resolve.
+    assert {"proj.a.Engine.run", "proj.a.Sink.flush", "proj.b.step",
+            "proj.b.mutual", "proj.b.leaf"} <= reach
+    assert "proj.b.orphan" not in reach
+    assert "proj.a.Engine.run" in graph.callers("proj.b.step")
+
+
+def test_replay_purity_fixture_golden():
+    proj = FIXTURES / "rp_project"
+    files = [SourceFile(p) for p in sorted(proj.glob("*.py"))]
+    graph = CallGraph(files)
+    got = sorted((Path(f.path).name, f.line, f.rule)
+                 for f in replay_purity.check_project(files, graph))
+    # offline_report's wall-clock read (server.py:21) is unreachable from
+    # the entrypoints and must stay unflagged; the REPRO_* env read
+    # (server.py:13) is the registered ambient-config namespace.
+    assert got == [
+        ("helpers.py", 8, "RP003"),
+        ("helpers.py", 9, "RP004"),
+        ("helpers.py", 14, "RP005"),
+        ("server.py", 11, "RP001"),
+        ("server.py", 12, "RP002"),
+    ]
+
+
+def test_snapshot_safety_fixture_golden():
+    assert _findings(FIXTURES / "bad_snapshot.py",
+                     snapshot_safety.check) == [
+        (10, "SN001"), (15, "SN002"), (18, "SN003")]
+
+
+def test_cache_key_interprocedural_golden():
+    path = FIXTURES / "bad_cache_helper.py"
+    src = SourceFile(path)
+    graph = CallGraph([src])
+    got = sorted((f.line, f.rule)
+                 for f in cache_keys.check_project([src], graph))
+    assert got == [(19, "CK002")]
+    # the helper's own store site keeps its file-scoped trusted-parameter
+    # exemption: the blame lands on the caller composing the key.
+    assert _findings(path, cache_keys.check) == []
+
+
+def test_multiline_suppression_span_and_dead_suppression():
+    path = str(FIXTURES / "serve" / "suppressed_span.py")
+    r = run_files([path], [determinism.check], strict=True)
+    # the DT001 on the continuation line (8) is covered by the allow on
+    # the statement's first line (7); the unused DT002 allow is dead.
+    assert sorted((f.line, f.rule) for f in r.suppressed) == [(8, "DT001")]
+    assert [(f.line, f.rule) for f in r.findings] == [(14, "SUP002")]
+    lax = run_files([path], [determinism.check], strict=False)
+    assert lax.findings == []
+    # a scoped run that never activates DT002 must not call its
+    # suppression dead
+    scoped = run_files([path], [determinism.check], strict=True,
+                       select=["DT001", "SUP"])
+    assert [(f.line, f.rule) for f in scoped.findings] == []
+
+
+def test_determinism_scope_covers_fleet_and_scenarios():
+    fleet = REPO / "src" / "repro" / "serve" / "fleet.py"
+    scenarios = REPO / "src" / "repro" / "queryengine" / "scenarios.py"
+    assert determinism.in_scope(str(fleet))
+    assert determinism.in_scope(str(scenarios))
+    assert determinism.check(SourceFile(fleet)) == []
+    assert determinism.check(SourceFile(scenarios)) == []
+
+
 def test_suppression_strict_requires_reason():
     r = run_files([str(FIXTURES / "serve" / "suppressed.py")],
                   [determinism.check], strict=True)
@@ -112,3 +226,53 @@ def test_cli_exit_codes_and_report():
          str(FIXTURES / "kernels_tree" / "kernels" / "goodpkg")],
         capture_output=True, text=True, env=env, cwd=REPO)
     assert ok.returncode == 0, ok.stdout
+
+
+def test_cli_rules_reference_covers_all_families():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--rules"],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert out.returncode == 0
+    for rule in ("TH001", "CK001", "CK002", "DT001", "DT003", "KP001",
+                 "KP003", "RP001", "RP002", "RP003", "RP004", "RP005",
+                 "SN001", "SN002", "SN003", "SUP001", "SUP002"):
+        assert rule in out.stdout, f"--rules table is missing {rule}"
+
+
+def test_cli_json_and_select():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--json",
+         "--select", "DT",
+         str(FIXTURES / "serve" / "bad_determinism.py")],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert out.returncode == 1
+    payload = json.loads(out.stdout)
+    assert payload["ok"] is False
+    rules = {f["rule"] for f in payload["findings"]}
+    assert rules and rules <= {"DT001", "DT002", "DT003"}
+    assert payload["summary"]["DT001"]["findings"] >= 1
+    # selecting a family the file never hits yields a clean exit
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--json",
+         "--select", "KP",
+         str(FIXTURES / "serve" / "bad_determinism.py")],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert ok.returncode == 0
+    assert json.loads(ok.stdout)["ok"] is True
+
+
+def test_docstring_allow_examples_are_not_suppressions():
+    # `# repro: allow[...]` text inside a string/docstring must neither
+    # register as a suppression nor be flagged dead (SUP002).
+    src = SourceFile("x.py", text='''\
+DOC = """
+inline example:  # repro: allow[DT001] not a real comment
+"""
+
+
+def f():
+    return DOC
+''')
+    assert src.suppressions == []

@@ -358,6 +358,27 @@ def test_effective_set_cache_snapshot_restore_round_trip():
     assert small.restore(blob) == 2 and len(small) == 1
 
 
+def test_restored_effective_sets_are_immutable():
+    """Unpickling yields writable arrays, and a restored entry's arrays
+    are shared by reference with every future hit — restore must re-freeze
+    them, same as the pool cache (SN003 bug class)."""
+    q = make_query("tpch", 1, variant=1)
+    svc = TuningService(cfg=CFG, dedupe=False)
+    svc.tune_batch([q])
+    fresh = EffectiveSetCache()
+    assert fresh.restore(svc.cache.snapshot()) == 1
+    (entry,) = list(fresh._entries.values())
+    es = entry.eset
+    for a in (es.Uc, es.labels, es.reps, es.pool):
+        assert not a.flags.writeable
+        with pytest.raises(ValueError):
+            a[...] = 0
+    if es.opt_idx is not None:
+        for bank in es.opt_idx:
+            for idx in bank:
+                assert not idx.flags.writeable
+
+
 def test_effective_set_snapshot_excludes_id_pinned_entries():
     """Entries keyed by the id() fallback (models without a content
     fingerprint) are process-local by construction and must not travel;
